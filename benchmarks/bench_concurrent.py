@@ -1,0 +1,45 @@
+"""Paper §4.1 / Figure 12: concurrent paths — interference + gains.
+
+Budget-model reproduction of: ①+② concurrent gains (4-13%), ③'s hidden
+bottleneck (P-N rule), and the DMA variant's reduced interference."""
+from __future__ import annotations
+
+from repro.core.planner import Alternative, PathPlanner, PathUse
+from repro.core.paths import PathSpec
+
+from benchmarks.common import row
+
+N = 200e9 / 8
+P_ = 256e9 / 8
+
+
+def paths():
+    return {
+        "net": PathSpec("net", "ici", None, 2, N, 1e-6, True, "net"),
+        "pcie": PathSpec("pcie", "pcie", None, 2, P_, 3e-7, True, "pcie"),
+        "dma": PathSpec("dma", "pcie", None, 2, 0.7 * P_, 3e-7, True, "pcie"),
+    }
+
+
+def main() -> None:
+    print("# fig12/4.1: concurrent path combinations (budget model)")
+    pl = PathPlanner(paths())
+    # ① + ③(H2S): intra-machine relay eats both pcie directions
+    p1 = Alternative("p1_host", uses=[PathUse("net", out_bytes=1),
+                                      PathUse("pcie", out_bytes=1)])
+    p3 = Alternative("p3_relay", uses=[PathUse("pcie", out_bytes=1, in_bytes=1)])
+    p3dma = Alternative("p3_dma", uses=[PathUse("dma", out_bytes=1)])
+    for name, combo in [("p1_alone", [p1]), ("p1_plus_p3", [p1, p3]),
+                        ("p3_alone", [p3]), ("p1_plus_dma", [p1, p3dma])]:
+        allocs, total = pl.combine_greedy(combo)
+        parts = " ".join(f"{a.alternative}={a.rate*8/1e9:.0f}Gbps({a.bottleneck})"
+                         for a in allocs)
+        row(f"fig12/{name}", 0.0, f"total={total*8/1e9:.0f}Gbps {parts}")
+    # the B_slow <= P - N slack rule
+    slack = pl.slack(p1, "pcie")
+    row("fig12/slack_P_minus_N", 0.0,
+        f"slack={slack*8/1e9:.0f}Gbps expected={(P_-N)*8/1e9:.0f}Gbps")
+
+
+if __name__ == "__main__":
+    main()

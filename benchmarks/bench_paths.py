@@ -1,0 +1,34 @@
+"""Paper Figure 3: per-path latency + peak throughput across payload
+sizes, from the calibrated TPU path model (core/paths.py).
+
+Each mesh path gets a latency/bandwidth curve vs payload; the derived
+column reports the paper-analogue finding (path-2-style fast path vs
+path-3-style double-crossing)."""
+from __future__ import annotations
+
+from repro.core.paths import collective_time, enumerate_paths
+
+from benchmarks.common import row
+
+PAYLOADS = [256, 4096, 65536, 1 << 20, 16 << 20, 256 << 20]
+
+
+def main() -> None:
+    paths = enumerate_paths({"pod": 2, "data": 16, "model": 16})
+    print("# fig3: path,payload_bytes -> us (model), bandwidth GB/s")
+    for name, p in sorted(paths.items()):
+        for payload in PAYLOADS:
+            t = p.time_for(payload)
+            row(f"fig3/{name}/{payload}", t * 1e6,
+                f"bw={payload / t / 1e9:.1f}GB/s")
+    print("# fig3b: collective time per op (64 MiB payload, per path)")
+    for name, p in sorted(paths.items()):
+        if p.axis is None:
+            continue
+        for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+            t = collective_time(op, 64 << 20, p)
+            row(f"fig3b/{name}/{op}", t * 1e6, f"n={p.size}")
+
+
+if __name__ == "__main__":
+    main()

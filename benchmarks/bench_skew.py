@@ -1,0 +1,50 @@
+"""Paper Figure 7 / Advice #1: skewed access collapses the wimpy path.
+
+TPU analogue: Zipfian MoE routing. We measure expert-load imbalance and
+dropped-token fraction vs skew, with and without hot-expert replication
+(the paper's hot-key replication), on the real MoE layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.moe import moe_ffn
+
+from benchmarks.common import row
+
+
+def biased_input(key, t, d, e, router, theta: float):
+    """Construct inputs whose router logits follow a zipf-like skew."""
+    x = jax.random.normal(key, (1, t, d)) * 0.1
+    if theta > 0:
+        # push tokens toward expert 0..2 proportional to skew
+        boost = jnp.asarray(np.random.default_rng(0).zipf(1 + theta, t) % 3)
+        bias = router[:, boost].T * 2.0 * theta        # (t, d)
+        x = x + bias[None, :, :] * 0.05
+    return x
+
+
+def main() -> None:
+    print("# fig7: MoE routing skew -> drop fraction / load imbalance")
+    d, e, k, f, t = 64, 16, 2, 128, 4096
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = {"router": jax.random.normal(ks[0], (d, e)) * 0.5,
+              "w_in": jax.random.normal(ks[1], (e, d, 2, f)) * 0.05,
+              "w_out": jax.random.normal(ks[2], (e, f, d)) * 0.05}
+    for theta in (0.0, 0.5, 1.0, 2.0):
+        x = biased_input(ks[3], t, d, e, params["router"], theta)
+        for cf, reps, tag in ((1.25, 1, "cap1.25"), (2.0, 1, "cap2.0"),
+                              (1.25, 3, "cap1.25+3replicas"),
+                              (None, 1, "lossless")):
+            _, m = moe_ffn(x, params, num_experts=e, top_k=k,
+                           activation=jax.nn.silu, capacity_factor=cf,
+                           hot_expert_replicas=reps)
+            load = np.asarray(m.expert_load)
+            imb = float(load.max() / max(load.mean(), 1e-9))
+            row(f"fig7/theta{theta}/{tag}", 0.0,
+                f"dropped={float(m.dropped_frac):.3f} imbalance={imb:.2f}")
+
+
+if __name__ == "__main__":
+    main()

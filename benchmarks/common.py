@@ -1,0 +1,29 @@
+"""Shared benchmark utilities. Every bench prints ``name,us_per_call,derived``
+CSV rows (plus richer derived columns per figure)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jitted call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.2f},{derived}"
+    print(line)
+    return line

@@ -1,0 +1,56 @@
+"""Roofline table: aggregates runs/dryrun/*.json into the EXPERIMENTS.md
+§Roofline table (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful | roofline | per-path |")
+SEP = "|---" * 10 + "|"
+
+
+def load(tag: str = ""):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RUNS, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        is_tagged = "_opt" in base or "_base" in base
+        if tag and not base.endswith(f"_{tag}"):
+            continue
+        if not tag and is_tagged:
+            continue
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows):
+    print(HEADER)
+    print(SEP)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        coll = ", ".join(f"{k}={v*1e3:.1f}ms" for k, v in
+                         sorted(r.get("collective_s_per_path", {}).items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+              f"| {r['collective_s']*1e3:.1f} | {r['dominant']} "
+              f"| {r['useful_flops_ratio']:.2f} | {r['roofline_frac']:.2f} "
+              f"| {coll} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load(args.tag)
+    if not rows:
+        print(f"# no dry-run artifacts under {RUNS} (run repro.launch.dryrun)")
+        return
+    table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark driver: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import (bench_bidirectional, bench_bucketing, bench_concurrent,
+                        bench_granularity, bench_kernels, bench_kvserve,
+                        bench_paths, bench_replication, bench_skew, roofline)
+
+SECTIONS = [
+    ("paths (Fig 3)", bench_paths.main),
+    ("bidirectional (Fig 5)", bench_bidirectional.main),
+    ("skew (Fig 7)", bench_skew.main),
+    ("granularity (Fig 8/9)", bench_granularity.main),
+    ("bucketing (Fig 10)", bench_bucketing.main),
+    ("concurrent (Fig 12/§4.1)", bench_concurrent.main),
+    ("replication (Fig 13/15, LineFS §5.1)", bench_replication.main),
+    ("kv-serve (Fig 17/18, DrTM-KV §5.2)", bench_kvserve.main),
+    ("kernels", bench_kernels.main),
+    ("roofline (§Roofline)", roofline.main),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, fn in SECTIONS:
+        print(f"\n==== {name} ====")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all sections
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

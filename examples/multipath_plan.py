@@ -1,0 +1,71 @@
+"""The paper's §4.2 guideline, end to end, on three functionalities:
+
+1. checkpoint replication (LineFS §5.1)  — measured compression ratio ->
+   rank A1/A2/A3 -> greedy combine;
+2. disaggregated KV get (DrTM-KV §5.2)  — rank A1..A5 -> combine A4+A5;
+3. gradient sync across pods            — decide hierarchical vs
+   compressed DCN sync from the path budgets.
+
+    PYTHONPATH=src python examples/multipath_plan.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.ckpt.checkpoint import save_checkpoint
+from repro.ckpt.replication import plan_replication
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.compression import compression_wins, grad_sync_seconds
+from repro.models.params import init_params
+from repro.serve.disagg import DisaggKV, KVStoreParams
+
+import tempfile, os
+
+
+def replication():
+    print("== functionality 1: checkpoint replication (LineFS) ==")
+    cfg = get_config("internlm2-1.8b").reduced(d_model=128, vocab_size=2048)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as tmp:
+        st = save_checkpoint(os.path.join(tmp, "ck"), params, step=0)
+    print(f" measured compression ratio: {st['ratio']:.2f}")
+    plan = plan_replication(ratio=st["ratio"])
+    print(f" ranked: {plan.ranked}  use_compression={plan.use_compression}")
+    print(f" {plan.notes}")
+    for a in plan.allocations:
+        print(f"  alloc {a.alternative}: {a.rate/1e9:.2f} GB/s (until {a.bottleneck})")
+
+
+def kv_store():
+    print("== functionality 2: disaggregated KV get (DrTM-KV) ==")
+    kv = DisaggKV(KVStoreParams())
+    paths, alts = kv.paths(), kv.alternatives()
+    ranked = sorted(alts.values(), key=lambda a: -a.solo_rate(paths))
+    for a in ranked:
+        print(f"  {a.name}: {a.solo_rate(paths)/1e6:5.1f} M gets/s, "
+              f"{a.criteria['latency_us']:.1f} us")
+    total, allocs = kv.combined_a4_a5()
+    print(f" combined A4+A5: {total/1e6:.1f} M gets/s "
+          f"({', '.join(f'{al.alternative}={al.rate/1e6:.1f}M' for al in allocs)})")
+
+
+def grad_sync():
+    print("== functionality 3: cross-pod gradient sync ==")
+    grad_bytes = 2 * 9.4e9 / 256            # bf16 grads, sharded over a pod
+    for name, ratio, rate in [("fp32", 2.0, float("inf")),
+                              ("bf16", 1.0, float("inf")),
+                              ("int8+EF", 0.26, 50e9)]:
+        t = grad_sync_seconds(grad_bytes, 2, hw.DCN_BW_PER_CHIP,
+                              ratio=ratio, compress_rate=rate)
+        print(f"  {name:8s}: {t*1e3:7.1f} ms/step over DCN")
+    print(f"  compression wins on DCN: "
+          f"{compression_wins(hw.DCN_BW_PER_CHIP, hw.ICI_BW_PER_LINK, 0.26)}")
+
+
+if __name__ == "__main__":
+    replication()
+    kv_store()
+    grad_sync()

@@ -1,0 +1,25 @@
+"""Batched serving example: continuous-batching decode over mixed-length
+requests (the DrTM-KV case study's executable side).
+
+    PYTHONPATH=src python examples/serve_batch.py --requests 8
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--reduced",
+                "--requests", str(args.requests),
+                "--prompt-len", "12", "--max-new", "12", "--slots", "4"])
+
+
+if __name__ == "__main__":
+    main()

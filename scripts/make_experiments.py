@@ -1,0 +1,136 @@
+"""Generate EXPERIMENTS.md: dry-run + roofline tables from runs/dryrun
+artifacts, plus the hand-authored validation/perf sections."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RUNS = os.path.join(ROOT, "runs", "dryrun")
+
+ARCH_ORDER = ["glm4-9b", "gemma2-9b", "gemma-7b", "internlm2-1.8b",
+              "granite-moe-1b-a400m", "moonshot-v1-16b-a3b", "internvl2-2b",
+              "musicgen-large", "mamba2-2.7b", "jamba-1.5-large-398b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SKIP_ARCHS = {"glm4-9b", "gemma2-9b", "gemma-7b", "internlm2-1.8b",
+              "granite-moe-1b-a400m", "moonshot-v1-16b-a3b", "internvl2-2b",
+              "musicgen-large"}
+
+
+def load_all():
+    out = {}
+    for fn in glob.glob(os.path.join(RUNS, "*.json")):
+        base = os.path.basename(fn)[:-5]
+        with open(fn) as f:
+            r = json.load(f)
+        tag = ""
+        for t in ("_opt_", "_diag"):
+            if t in base:
+                tag = base.split(t, 1)[1]
+        key = (r["arch"], r["shape"], r["mesh"], tag)
+        out[key] = r
+    return out
+
+
+def fmt_bytes(n):
+    if n >= 2**30:
+        return f"{n/2**30:.2f}GiB"
+    return f"{n/2**20:.1f}MiB"
+
+
+def dryrun_table(rows):
+    lines = ["| arch | shape | mesh | compiled | args/chip | temp (module) | FLOPs/chip | coll. ops |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = rows.get((arch, shape, mesh, ""))
+                if r is None:
+                    if shape == "long_500k" and arch in SKIP_ARCHS:
+                        lines.append(f"| {arch} | {shape} | {mesh} | SKIP (full attention at 524k) | — | — | — | — |")
+                    else:
+                        lines.append(f"| {arch} | {shape} | {mesh} | (pending) | — | — | — | — |")
+                    continue
+                ops = ", ".join(f"{k}:{v}" for k, v in sorted(r["collective_op_counts"].items()))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | yes ({r['compile_s']:.0f}s) "
+                    f"| {fmt_bytes(r['memory']['argument_bytes'])} "
+                    f"| {fmt_bytes(r['memory']['temp_bytes'])} "
+                    f"| {r['flops_per_chip']:.2e} | {ops} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows, mesh="16x16"):
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO | per-path |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get((arch, shape, mesh, ""))
+            if r is None:
+                continue
+            per = ", ".join(f"{k}={v*1e3:.1f}ms" for k, v in sorted(r["collective_s_per_path"].items()))
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['dominant']} "
+                f"| {r['useful_flops_ratio']:.2f} | {per} |")
+    return "\n".join(lines)
+
+
+def bottleneck_notes(rows):
+    notes = []
+    for arch in ARCH_ORDER:
+        r = rows.get((arch, "train_4k", "16x16", ""))
+        if r is None:
+            continue
+        dom = r["dominant"]
+        fix = {
+            "compute": "raise per-chip batch or cut recompute (remat policy)",
+            "memory": "fuse elementwise chains / widen loss chunks / drop remat recompute reads",
+            "collective": "narrow TP-boundary dtype (bf16 on TPU), shrink TP degree for this size, overlap with compute",
+        }[dom]
+        notes.append(f"- **{arch} x train_4k**: dominant={dom}; to move it: {fix}.")
+    return "\n".join(notes)
+
+
+HEADER = """# EXPERIMENTS
+
+All numbers from this repository on the CPU container (TPU v5e is the
+*target*: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 6.25 GB/s
+DCN/chip — core/hw.py). Dry-run = `.lower().compile()` with
+ShapeDtypeStructs on 512 fake host devices; every FLOP/byte/collective
+figure is parsed from the compiled per-device HLO (layers fully
+unrolled so scan bodies are counted; see DESIGN.md).
+
+Known CPU-backend artifacts (affect absolute values, not comparisons):
+XLA CPU's AllReducePromotion pass forces every reduce-collective to f32
+(the TPU target moves bf16: collective terms here are ~2x TPU wire
+bytes for activation reductions); CPU HLO does not fuse like TPU, so
+"bytes accessed" (memory term) over-counts elementwise traffic; and
+`memory_analysis().temp_size` aggregates the whole module.
+"""
+
+
+def main():
+    rows = load_all()
+    done = sum(1 for k in rows if not k[3])
+    parts = [HEADER]
+    parts.append("## §Dry-run (deliverable e) — every (arch x shape x mesh) cell\n")
+    parts.append(f"{done} cells lowered+compiled (40 logical cells x 2 meshes; "
+                 "8 archs skip long_500k by design).\n")
+    parts.append(dryrun_table(rows))
+    parts.append("\n## §Roofline (deliverable g) — single-pod 16x16\n")
+    parts.append(roofline_table(rows, "16x16"))
+    parts.append("\n### Multi-pod 2x16x16\n")
+    parts.append(roofline_table(rows, "2x16x16"))
+    parts.append("\n### Dominant-term notes (one per arch, train_4k)\n")
+    parts.append(bottleneck_notes(rows))
+    static = os.path.join(ROOT, "scripts", "experiments_static.md")
+    if os.path.exists(static):
+        parts.append("\n" + open(static).read())
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"EXPERIMENTS.md written ({done} baseline cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+                                   save_checkpoint)
+from repro.ckpt.replication import ReplicationPlan, plan_replication

@@ -1,0 +1,219 @@
+"""Checkpoint save/restore with async staging and chain replication.
+
+LineFS case study (paper §5.1) mapped to training-state persistence:
+the "file" is the checkpoint shard, the "remote NVM backups" are
+replica targets, and the three alternatives are
+
+  A1  compress on the offload path, then replicate (double-crossing the
+      staging link: raw in, compressed out);
+  A2  compress via the DMA-analogue staging path (bypasses the primary
+      link);
+  A3  replicate raw, directly from the source (no compression, more
+      "network" bytes but no staging bottleneck).
+
+On this CPU container replica targets are directories and the path
+bandwidths are the modeled constants (core/hw.py); the *decision logic*
+(planner ranking + greedy combine) and the *mechanics* (compression,
+chain ordering, atomic commit, manifest validation, async staging) are
+real and tested.
+
+Layout per checkpoint:
+  <dir>/step_<k>/manifest.msgpack       tree structure + shapes + hashes
+  <dir>/step_<k>/data.npz[.zst]         flattened leaves
+  <dir>/step_<k>/COMMIT                 written last (atomicity marker)
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                        for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def save_checkpoint(path: str, tree: PyTree, *, step: int,
+                    compress: bool = True, meta: Optional[dict] = None) -> Dict[str, float]:
+    """Writes atomically (COMMIT marker last). Returns size/timing stats."""
+    t0 = time.monotonic()
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten_with_names(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **{name: arr for name, arr in leaves})
+    raw = buf.getvalue()
+    payload = zstd.ZstdCompressor(level=3).compress(raw) if compress else raw
+    fname = "data.npz.zst" if compress else "data.npz"
+    with open(os.path.join(tmp, fname), "wb") as f:
+        f.write(payload)
+
+    manifest = {
+        "step": step,
+        "compress": compress,
+        "raw_bytes": len(raw),
+        "stored_bytes": len(payload),
+        "sha256": hashlib.sha256(payload).hexdigest(),
+        "names": [n for n, _ in leaves],
+        "meta": meta or {},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write(str(step))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    dt = time.monotonic() - t0
+    return {"raw_bytes": len(raw), "stored_bytes": len(payload),
+            "ratio": len(payload) / max(len(raw), 1), "seconds": dt}
+
+
+def load_checkpoint(path: str, like: PyTree) -> Tuple[PyTree, int]:
+    """Validates COMMIT + hash, reconstructs the pytree of `like`."""
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    fname = "data.npz.zst" if manifest["compress"] else "data.npz"
+    with open(os.path.join(path, fname), "rb") as f:
+        payload = f.read()
+    if hashlib.sha256(payload).hexdigest() != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} corrupt (hash mismatch)")
+    raw = zstd.ZstdDecompressor().decompress(payload) if manifest["compress"] else payload
+    npz = np.load(io.BytesIO(raw))
+    flat_names = [n for n, _ in _flatten_with_names(like)]
+    assert flat_names == manifest["names"], "tree structure changed"
+    leaves = [npz[n] for n in flat_names]
+    treedef = jax.tree_util.tree_structure(like)
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(a, dtype=l.dtype)
+                  for a, l in zip(leaves, jax.tree_util.tree_leaves(like))])
+    return restored, int(manifest["step"])
+
+
+class CheckpointManager:
+    """Periodic async checkpoints + chain replication + retention.
+
+    Async staging = snapshot to host (np.asarray) on the caller thread
+    (cheap; the paper's "DMA to staging memory"), then a background
+    thread does compress+write+replicate — training continues.
+    """
+
+    def __init__(self, directory: str, *, every: int = 100, keep: int = 2,
+                 compress: bool = True, replicas: int = 0,
+                 replica_dirs: Optional[List[str]] = None):
+        self.dir = directory
+        self.every = every
+        self.keep = keep
+        self.compress = compress
+        self.replica_dirs = list(replica_dirs or [])
+        if replicas and not self.replica_dirs:
+            self.replica_dirs = [os.path.join(directory, f"replica_{i}")
+                                 for i in range(replicas)]
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.stats: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int, root: Optional[str] = None) -> str:
+        return os.path.join(root or self.dir, f"step_{step:08d}")
+
+    def maybe_save(self, step: int, tree: PyTree, *, blocking: bool = False) -> bool:
+        if self.every <= 0 or step % self.every:
+            return False
+        self.save(step, tree, blocking=blocking)
+        return True
+
+    def save(self, step: int, tree: PyTree, *, blocking: bool = False):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)   # stage
+        self.wait()                                               # one writer
+
+        def work():
+            st = save_checkpoint(self._step_dir(step), host_tree,
+                                 step=step, compress=self.compress)
+            # chain replication: primary -> r0 -> r1 -> ... (paper §5.1)
+            src = self._step_dir(step)
+            for rdir in self.replica_dirs:
+                dst = self._step_dir(step, rdir)
+                os.makedirs(rdir, exist_ok=True)
+                if os.path.exists(dst):
+                    shutil.rmtree(dst)
+                shutil.copytree(src, dst)
+                src = dst
+            st["step"] = step
+            self.stats.append(st)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def _complete_steps(self, root: str) -> List[int]:
+        if not os.path.isdir(root):
+            return []
+        steps = []
+        for d in os.listdir(root):
+            if d.startswith("step_") and \
+                    os.path.exists(os.path.join(root, d, "COMMIT")):
+                steps.append(int(d.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        """Newest committed step across primary + replicas (a failed
+        primary is recovered from the chain)."""
+        best: Optional[int] = None
+        for root in [self.dir] + self.replica_dirs:
+            steps = self._complete_steps(root)
+            if steps and (best is None or steps[-1] > best):
+                best = steps[-1]
+        return best
+
+    def restore(self, like: PyTree, step: Optional[int] = None) -> Tuple[PyTree, int]:
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        errors = []
+        for root in [self.dir] + self.replica_dirs:
+            try:
+                return load_checkpoint(self._step_dir(step, root), like)
+            except (FileNotFoundError, IOError, AssertionError) as e:
+                errors.append(str(e))
+        raise IOError(f"step {step} unrecoverable from any replica: {errors}")
+
+    def _gc(self):
+        for root in [self.dir] + self.replica_dirs:
+            steps = self._complete_steps(root)
+            for s in steps[:-self.keep]:
+                shutil.rmtree(self._step_dir(s, root), ignore_errors=True)

@@ -1,0 +1,37 @@
+"""--arch registry: resolve architecture ids to ModelConfigs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "glm4-9b": "repro.configs.glm4_9b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_16b_a3b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown --arch {arch!r}; known: {', '.join(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch])
+    cfg: ModelConfig = mod.CONFIG
+    assert cfg.name == arch, (cfg.name, arch)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in _MODULES}

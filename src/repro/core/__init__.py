@@ -1,0 +1,14 @@
+"""core: the paper's contribution — multi-path characterization,
+planning and collectives for TPU meshes."""
+from repro.core import hw
+from repro.core.paths import PathSpec, enumerate_paths, collective_bytes_per_chip
+from repro.core.planner import Alternative, PathPlanner, PathUse
+from repro.core.charz import parse_collectives, summarize_traffic
+from repro.core.roofline import RooflineReport, build_report, model_flops_for
+
+__all__ = [
+    "hw", "PathSpec", "enumerate_paths", "collective_bytes_per_chip",
+    "Alternative", "PathPlanner", "PathUse",
+    "parse_collectives", "summarize_traffic",
+    "RooflineReport", "build_report", "model_flops_for",
+]

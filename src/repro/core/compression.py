@@ -1,0 +1,94 @@
+"""Compression substrate (paper LineFS A1/A2: compress before the slow
+path; DrTM-KV: small payloads win).
+
+- blockwise int8 quantization (pure-JAX reference; the Pallas kernel in
+  kernels/quant is the TPU hot-spot version) used for: gradient sync over
+  DCN, checkpoint replication, optimizer-moment storage, KV-cache spill.
+- error feedback (residual carry) so lossy gradient sync stays unbiased
+  over time.
+- the analytic "when does compression win" model from §5.1.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    q: jax.Array        # int8 payload, same shape as input
+    scale: jax.Array    # f32 per-block scales (leading blocks dim)
+
+
+def quantize_int8_blockwise(x: jax.Array, block: int = 256) -> Quantized:
+    """Symmetric per-block int8. Pads to a block multiple internally."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=1) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(blk / scale[:, None]), -127, 127).astype(jnp.int8)
+    return Quantized(q=q, scale=scale)
+
+
+def dequantize_int8_blockwise(qt: Quantized, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (qt.q.astype(jnp.float32) * qt.scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantized_nbytes(qt: Quantized) -> int:
+    return qt.q.size + qt.scale.size * 4
+
+
+class ErrorFeedback(NamedTuple):
+    """Residual state for unbiased lossy gradient sync."""
+    residual: jax.Array
+
+    @staticmethod
+    def init(shape, dtype=jnp.float32):
+        return ErrorFeedback(residual=jnp.zeros(shape, dtype))
+
+
+def compress_with_feedback(g: jax.Array, ef: ErrorFeedback,
+                           block: int = 256) -> Tuple[Quantized, ErrorFeedback]:
+    """q = Q(g + residual); residual' = (g + residual) - deq(q)."""
+    corrected = g.astype(jnp.float32) + ef.residual
+    qt = quantize_int8_blockwise(corrected, block)
+    deq = dequantize_int8_blockwise(qt, g.shape)
+    return qt, ErrorFeedback(residual=corrected - deq)
+
+
+# ----------------------------------------------------------------------
+# §5.1 analytic model: when does compress-then-send win?
+# ----------------------------------------------------------------------
+
+def offload_path_bandwidth(P: float, ratio: float) -> float:
+    """Paper: A1 file bandwidth over the double-crossed internal link is
+    P / (1 + ratio)."""
+    return P / (1.0 + ratio)
+
+
+def compression_wins(N: float, P: float, ratio: float,
+                     compress_rate: Optional[float] = None) -> bool:
+    """Is compress-and-offload (A1) faster than direct send (A3)?
+    Paper threshold: ratio < P/N − 1 (equals 28% on their testbed).
+    An optional compressor-throughput cap (wimpy SoC) tightens it."""
+    a1 = min(offload_path_bandwidth(P, ratio), N / max(ratio, 1e-12))
+    if compress_rate is not None:
+        a1 = min(a1, compress_rate)
+    return a1 > N
+
+
+def grad_sync_seconds(nbytes: float, n: int, bw: float, *,
+                      ratio: float = 1.0, compress_rate: float = math.inf) -> float:
+    """Ring all-reduce time for nbytes with optional compression: wire
+    bytes scale by `ratio`, plus quantize/dequantize at `compress_rate`."""
+    wire = 2.0 * nbytes * ratio * (n - 1) / n / bw
+    comp = 0.0 if math.isinf(compress_rate) else 2.0 * nbytes / compress_rate
+    return wire + comp

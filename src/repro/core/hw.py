@@ -1,0 +1,28 @@
+"""Hardware constants for the TPU v5e target (per chip).
+
+These play the role of the paper's Table 1/2 testbed description: fixed,
+vendor-published numbers from which every roofline/interference model in
+core/ derives. The CPU container never executes at these speeds — they
+parameterize the analytic backend of the characterization, exactly as the
+paper's P (PCIe) and N (network) constants parameterize its §4/§5 models.
+"""
+from __future__ import annotations
+
+# compute / memory (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+HBM_BYTES = 16 * 2**30          # 16 GiB
+VMEM_BYTES = 128 * 2**20        # ~128 MiB vector memory
+
+# interconnect
+ICI_BW_PER_LINK = 50e9          # bytes/s per link per direction
+ICI_LINKS_PER_AXIS = 1          # links serving one mesh-axis ring direction
+DCN_BW_PER_CHIP = 6.25e9        # bytes/s per chip across the pod boundary
+PCIE_BW = 16e9                  # bytes/s host<->device, per direction
+PCIE_LAT = 3e-6                 # seconds, host<->device one way
+ICI_LAT = 1e-6                  # seconds per hop
+DCN_LAT = 10e-6                 # seconds
+
+# the paper's P and N, reborn: for a path that crosses a shared link
+# twice (paper path-3), the usable budget is the *unidirectional* limit
+# and it interferes with the primary traffic (B_slow <= P - N rule).

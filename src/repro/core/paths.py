@@ -1,0 +1,98 @@
+"""Communication-path model (paper §2.3/§3, Figure 1 for TPU).
+
+A mesh exposes several *paths*, each with its own bandwidth, latency,
+directionality and sharing group — the TPU rendition of the paper's
+①/②/③/③*:
+
+  ici:<axis>   — intra-pod ICI ring on mesh axis `axis`   (paper ①/②)
+  dcn:pod      — inter-pod data-center network             (paper ③:
+                 slow, shared, interferes with everything crossing it)
+  pcie:host    — host<->device staging (checkpoint/offload) (paper ③*:
+                 bypasses ICI/DCN but has a weak engine)
+
+`enumerate_paths(mesh)` builds the PathSpec table; planner/interference
+consume it. Bandwidths are per chip, per direction; `bidirectional=True`
+means opposite-direction flows multiplex (paper Fig 5: READ+WRITE
+reaching 2x the one-way limit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import hw
+
+
+@dataclass(frozen=True)
+class PathSpec:
+    name: str                 # "ici:data", "dcn:pod", "pcie:host"
+    kind: str                 # ici | dcn | pcie
+    axis: Optional[str]       # mesh axis this path runs over (None for pcie)
+    size: int                 # number of participants along the path
+    bw: float                 # bytes/s per chip per direction
+    latency: float            # seconds, one hop
+    bidirectional: bool       # opposite flows multiplex (2x aggregate)
+    shared_group: str         # interference group (paths sharing media)
+
+    def time_for(self, bytes_per_chip: float, *, both_directions: bool = False) -> float:
+        """Transfer time. If traffic uses both directions of a
+        bidirectional path it still completes in bytes/bw (multiplexed);
+        same-direction traffic from two flows halves each flow's share —
+        that logic lives in the InterferenceModel."""
+        if bytes_per_chip <= 0:
+            return 0.0
+        return self.latency + bytes_per_chip / self.bw
+
+
+def enumerate_paths(mesh_shape: Dict[str, int]) -> Dict[str, PathSpec]:
+    """mesh_shape: {"pod": 2, "data": 16, "model": 16} (or without pod)."""
+    paths: Dict[str, PathSpec] = {}
+    for axis, size in mesh_shape.items():
+        if size <= 1:
+            continue
+        if axis == "pod":
+            paths["dcn:pod"] = PathSpec(
+                name="dcn:pod", kind="dcn", axis="pod", size=size,
+                bw=hw.DCN_BW_PER_CHIP, latency=hw.DCN_LAT,
+                bidirectional=True, shared_group="dcn")
+        else:
+            paths[f"ici:{axis}"] = PathSpec(
+                name=f"ici:{axis}", kind="ici", axis=axis, size=size,
+                bw=hw.ICI_BW_PER_LINK * hw.ICI_LINKS_PER_AXIS,
+                latency=hw.ICI_LAT, bidirectional=True,
+                shared_group="ici")
+    paths["pcie:host"] = PathSpec(
+        name="pcie:host", kind="pcie", axis=None, size=1,
+        bw=hw.PCIE_BW, latency=hw.PCIE_LAT,
+        bidirectional=True, shared_group="pcie")
+    return paths
+
+
+# ----------------------------------------------------------------------
+# per-collective traffic model (bytes crossing the path per chip)
+# ----------------------------------------------------------------------
+
+def collective_bytes_per_chip(op: str, payload_bytes: float, n: int) -> float:
+    """Ring-algorithm traffic for one chip, payload = full (unsharded)
+    logical tensor size for all-reduce, the *output* size for all-gather
+    and the *input* size for reduce-scatter."""
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * payload_bytes * frac
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return payload_bytes * frac
+    if op == "collective-permute":
+        return payload_bytes
+    raise ValueError(op)
+
+
+def collective_time(op: str, payload_bytes: float, path: PathSpec) -> float:
+    b = collective_bytes_per_chip(op, payload_bytes, path.size)
+    steps = {"all-reduce": 2 * (path.size - 1),
+             "all-gather": path.size - 1,
+             "reduce-scatter": path.size - 1,
+             "all-to-all": path.size - 1,
+             "collective-permute": 1}[op]
+    return steps * path.latency + b / path.bw

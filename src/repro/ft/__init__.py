@@ -1,0 +1,3 @@
+from repro.ft.manager import FaultToleranceManager, NodeState
+from repro.ft.elastic import best_mesh_for, reshard
+from repro.ft.straggler import StragglerDetector

@@ -1,0 +1,49 @@
+"""Elastic re-meshing: choose the best (pod, data, model) mesh for the
+surviving device count and reshard state onto it.
+
+Policy: keep the model axis (TP degree) fixed if possible — TP is
+constrained by head/expert divisibility — and shrink data (FSDP) first;
+drop to fewer pods only when a whole pod died. Resharding is a
+device_put against the new NamedShardings (XLA moves the bytes; on a
+real fleet this is the ICI/DCN reshard traffic the planner budgets).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.parallel.sharding import tree_shardings
+
+
+def best_mesh_for(devices: int, *, model: int = 16,
+                  prefer_pods: int = 2) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest mesh shape <= devices with the given TP degree.
+    Returns (shape, axis_names)."""
+    while model > 1 and devices % model:
+        model //= 2
+    rest = devices // model
+    for pods in range(min(prefer_pods, rest), 0, -1):
+        if rest % pods == 0:
+            data = rest // pods
+            if pods > 1:
+                return (pods, data, model), ("pod", "data", "model")
+            return (data, model), ("data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh(shape: Tuple[int, ...], names: Tuple[str, ...],
+              devices=None) -> jax.sharding.Mesh:
+    n = 1
+    for s in shape:
+        n *= s
+    devs = (devices or jax.devices())[:n]
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devs).reshape(shape), names)
+
+
+def reshard(tree, logical_tree, new_mesh: jax.sharding.Mesh):
+    """Move a (params/opt) pytree onto a new mesh via its logical axes."""
+    shapes = jax.tree.map(lambda x: x, tree)
+    sh = tree_shardings(logical_tree, shapes, new_mesh)
+    return jax.device_put(tree, sh)

@@ -1,0 +1,67 @@
+"""Fault tolerance: heartbeat failure detection + checkpoint/restart.
+
+On a real cluster each host heartbeats to this manager (or to etcd/GCS);
+here nodes are registered entities whose heartbeats tests drive
+explicitly. The recovery policy is the deliverable:
+
+  failure detected -> quiesce -> pick survivor mesh (ft/elastic.py)
+  -> restore newest committed checkpoint (any replica in the chain)
+  -> reshard state onto the survivor mesh -> resume at step k+1.
+
+Because the data pipeline is stateless-addressable (data/pipeline.py),
+resume needs nothing beyond the step index.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+@dataclass
+class NodeState:
+    name: str
+    last_heartbeat: float
+    alive: bool = True
+    devices: int = 0
+
+
+class FaultToleranceManager:
+    def __init__(self, ckpt: CheckpointManager, *, timeout: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.ckpt = ckpt
+        self.timeout = timeout
+        self.clock = clock
+        self.nodes: Dict[str, NodeState] = {}
+        self.events: List[dict] = []
+
+    # ---- membership ----
+    def register(self, name: str, devices: int = 1):
+        self.nodes[name] = NodeState(name, self.clock(), True, devices)
+
+    def heartbeat(self, name: str):
+        self.nodes[name].last_heartbeat = self.clock()
+
+    def check(self) -> List[str]:
+        """Mark nodes whose heartbeat lapsed; returns newly-failed names."""
+        now = self.clock()
+        failed = []
+        for n in self.nodes.values():
+            if n.alive and now - n.last_heartbeat > self.timeout:
+                n.alive = False
+                failed.append(n.name)
+                self.events.append({"t": now, "event": "node_failed", "node": n.name})
+        return failed
+
+    def alive_devices(self) -> int:
+        return sum(n.devices for n in self.nodes.values() if n.alive)
+
+    # ---- recovery ----
+    def recover(self, like_tree, *, step: Optional[int] = None):
+        """Restore the newest committed checkpoint (chain fallback built
+        into CheckpointManager.restore). Returns (tree, resume_step)."""
+        tree, k = self.ckpt.restore(like_tree, step)
+        self.events.append({"t": self.clock(), "event": "restored", "step": k})
+        return tree, k + 1

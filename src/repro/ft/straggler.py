@@ -1,0 +1,55 @@
+"""Straggler detection + mitigation hooks.
+
+Detection: per-step wall times per node; a node whose EMA exceeds
+``threshold`` x the fleet median is flagged. Mitigation on a real fleet:
+(1) deprioritize its DCN traffic (planner slack rule), (2) shrink its
+microbatch share (skewed-batch rebalance), (3) if persistent, treat as
+failed -> elastic re-mesh. Here the detector + rebalance math are real;
+tests drive them with synthetic timings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class StragglerDetector:
+    alpha: float = 0.3            # EMA coefficient
+    threshold: float = 1.5        # x median => straggler
+    ema: Dict[str, float] = field(default_factory=dict)
+
+    def observe(self, node: str, step_seconds: float):
+        prev = self.ema.get(node)
+        self.ema[node] = (step_seconds if prev is None
+                          else self.alpha * step_seconds + (1 - self.alpha) * prev)
+
+    def stragglers(self) -> List[str]:
+        if len(self.ema) < 2:
+            return []
+        med = float(np.median(list(self.ema.values())))
+        return [n for n, v in self.ema.items() if v > self.threshold * med]
+
+    def rebalanced_shares(self, total_microbatches: int) -> Dict[str, int]:
+        """Give each node work inversely proportional to its step time —
+        the skew-taming advice (#1) applied to compute instead of memory."""
+        if not self.ema:
+            return {}
+        inv = {n: 1.0 / v for n, v in self.ema.items()}
+        z = sum(inv.values())
+        raw = {n: total_microbatches * w / z for n, w in inv.items()}
+        shares = {n: max(1, int(round(r))) for n, r in raw.items()}
+        # fix rounding drift
+        drift = total_microbatches - sum(shares.values())
+        order = sorted(shares, key=lambda n: -raw[n])
+        i = 0
+        while drift != 0 and order:
+            n = order[i % len(order)]
+            if drift > 0:
+                shares[n] += 1; drift -= 1
+            elif shares[n] > 1:
+                shares[n] -= 1; drift += 1
+            i += 1
+        return shares

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  flash_attention  — causal GQA attention w/ sliding window + logit softcap
+  decode_attention — single-token flash-decoding against a KV cache
+  ssd_scan         — Mamba2 SSD chunked scan (state carried across chunks)
+  quant            — blockwise int8 compress/decompress (grad/ckpt/KV paths)
+"""

@@ -1,0 +1,107 @@
+"""Flash-decoding, Pallas/TPU: one query token vs a long KV cache.
+
+Grid = (B, Hkv, n_kv_blocks), KV innermost; scratch carries (m, l, acc)
+for the `groups` query heads that share each KV head. Blocks entirely
+beyond ``cache_len`` are skipped (pl.when) — the serving analogue of the
+paper's advice to never issue oversized reads: the cache is walked in
+``kv_block`` segments, and segments past the fill line cost nothing.
+
+This is the DrTM-KV hot spot: the "value read" of a get(). The serve/
+layer chooses *where* this runs (which path the cache shard lives on);
+this kernel makes each shard's read fast.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(clen_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, kv_block: int, window: Optional[int],
+                softcap: Optional[float]):
+    ki = pl.program_id(2)
+    nkv = pl.num_programs(2)
+    clen = clen_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    lo = ki * kv_block
+    needed = lo < clen
+    if window is not None:
+        needed = jnp.logical_and(needed, lo + kv_block > clen - window)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (kb, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        msk = kpos < clen
+        if window is not None:
+            msk = jnp.logical_and(msk, kpos >= clen - window)
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * msk
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot_general(p.astype(v.dtype), v,
+                                              (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bhgd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                          cache_len: jax.Array, *,
+                          window: Optional[int] = None,
+                          softcap: Optional[float] = None,
+                          kv_block: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """q (B,Hkv,G,hd) — G = query heads per KV head; caches (B,Hkv,S,hd);
+    cache_len scalar int32. Returns (B,Hkv,G,hd)."""
+    b, hkv, g, d = q.shape
+    s = k_cache.shape[2]
+    kv_block = min(kv_block, s)
+    assert s % kv_block == 0
+    nkv = s // kv_block
+
+    kern = functools.partial(_dec_kernel, scale=1.0 / (d ** 0.5),
+                             kv_block=kv_block, window=window, softcap=softcap)
+    clen = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hkv, nkv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, ki: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h, ki: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h, ki: (b_, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, ki: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, q, k_cache, v_cache)

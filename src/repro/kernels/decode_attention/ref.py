@@ -1,0 +1,2 @@
+"""Oracle: single-token KV-cache attention from the model zoo."""
+from repro.models.attention import decode_attention as decode_attention_ref  # noqa: F401

@@ -1,0 +1,120 @@
+"""Flash attention forward, Pallas/TPU.
+
+Layout: inputs pre-transposed to (B, H, S, hd). Grid =
+(B, Hq, nq, nkv) with the KV dimension innermost — TPU grid iteration is
+sequential, so (m, l, acc) scratch in VMEM carries across KV steps.
+Blocks fully above the causal diagonal or left of the sliding window are
+skipped with ``pl.when`` (no MXU work issued), which is what keeps
+compiled FLOPs ≈ useful FLOPs (paper Advice #2/#3: granularity).
+
+VMEM budget per step: q/k/v tiles (block × hd) + acc (block × hd f32)
++ m/l vectors — e.g. block=512, hd=256: 3·512·256·2B + 512·256·4B ≈ 1.3 MB,
+far under the ~64–128 MB VMEM of a v5e core; block sizes are multiples
+of 128 to keep the MXU fully tiled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, q_block: int, kv_block: int,
+               causal: bool, window: Optional[int],
+               softcap: Optional[float]):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level skip (causal / window)
+    needed = True
+    if causal:
+        needed = ki * kv_block <= qi * q_block + (q_block - 1)
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, (ki + 1) * kv_block - 1 > qi * q_block - window)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (qb, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (kb, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (qb, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        msk = jnp.ones(s.shape, dtype=bool)
+        if causal:
+            msk = jnp.logical_and(msk, kpos <= qpos)
+        if window is not None:
+            msk = jnp.logical_and(msk, kpos > qpos - window)
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * msk                          # zero masked rows
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot_general(p.astype(v.dtype), v,
+                                              (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         q_block: int = 256, kv_block: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """q (B,Hq,S,hd); k/v (B,Hkv,S,hd); returns (B,Hq,S,hd)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    groups = hq // hkv
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0, (s, q_block, kv_block)
+    nq, nkv = s // q_block, s // kv_block
+    grid = (b, hq, nq, nkv)
+
+    kern = functools.partial(
+        _fa_kernel, scale=1.0 / (d ** 0.5), q_block=q_block,
+        kv_block=kv_block, causal=causal, window=window, softcap=softcap)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda b_, h, qi, ki, g=groups: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda b_, h, qi, ki, g=groups: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, d), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

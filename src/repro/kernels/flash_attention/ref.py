@@ -1,0 +1,3 @@
+"""Oracle: quadratic attention (delegates to the model-zoo reference so
+kernel and model share one source of truth)."""
+from repro.models.attention import attention_ref as attention_ref  # noqa: F401

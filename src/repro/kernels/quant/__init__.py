@@ -1,0 +1,1 @@
+from repro.kernels.quant.ops import quantize_int8, dequantize_int8

@@ -1,0 +1,17 @@
+"""Oracle for the int8 blockwise quantization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array):
+    """x (nblk, blk) f32/bf16 -> (q int8 (nblk, blk), scale f32 (nblk, 1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,112 @@
+"""Mamba2 SSD chunked scan, Pallas/TPU.
+
+Grid = (B, n_head_tiles, n_chunks) with chunks innermost; the running
+inter-chunk state (Ht, P, N) lives in VMEM scratch and carries across
+chunk iterations — the TPU-native version of the paper's "keep the
+recurrent state close to the compute" (the SoC analogue holds its own
+working set; cf. DESIGN.md path mapping).
+
+Per chunk and head-tile the kernel computes, entirely in VMEM:
+  intra  = tril(C B^T * decay) @ x        (the quadratic branch, MXU)
+  inter  = C @ h_prev * exp(cum)          (read of the carried state)
+  h_new  = h_prev * exp(sum_dA) + sum_s exp(last-cum_s) dt_s B_s x_s
+
+VMEM per step (L=chunk, Ht=head tile, P=head dim, N=state):
+x (L,Ht,P) + scores (L,L,Ht) + state (Ht,P,N) f32 — e.g. L=128, Ht=8,
+P=64, N=128: ~1.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)         # (L, Ht, P)
+    dt = dt_ref[0].astype(jnp.float32)       # (L, Ht)
+    A = a_ref[0].astype(jnp.float32)         # (Ht,)
+    Bm = b_ref[0].astype(jnp.float32)        # (L, N)
+    C = c_ref[0].astype(jnp.float32)         # (L, N)
+
+    dA = dt * A[None, :]                     # (L, Ht)
+    cum = jnp.cumsum(dA, axis=0)             # (L, Ht)
+
+    # ---- intra-chunk ----
+    CB = jax.lax.dot_general(C, Bm, (((1,), (1,)), ((), ())))   # (L, L)
+    decay = jnp.exp(cum[:, None, :] - cum[None, :, :])          # (L, L, Ht)
+    L = x.shape[0]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tril = (si <= ti)
+    scores = CB[:, :, None] * decay * dt[None, :, :]            # (L, L, Ht)
+    scores = jnp.where(tril[:, :, None], scores, 0.0)
+    y = jnp.einsum("tsh,shp->thp", scores, x)                   # (L, Ht, P)
+
+    # ---- inter-chunk: read carried state ----
+    h_prev = h_ref[...]                                          # (Ht, P, N)
+    y += jnp.einsum("tn,hpn->thp", C, h_prev) * jnp.exp(cum)[:, :, None]
+
+    # ---- state update ----
+    last = cum[-1:, :]                                           # (1, Ht)
+    w = jnp.exp(last - cum) * dt                                 # (L, Ht)
+    new_state = jnp.einsum("th,tn,thp->hpn", w, Bm, x)
+    h_ref[...] = h_prev * jnp.exp(last[0])[:, None, None] + new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, C: jax.Array, *,
+                    chunk: int = 128, head_tile: int = 8,
+                    interpret: bool = False):
+    """x (B,S,H,P); dt (B,S,H); A (H,); Bm/C (B,S,N).
+    Returns (y (B,S,H,P) f32, final state (B,H,P,N) f32)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    ht = min(head_tile, h)
+    while h % ht:
+        ht -= 1
+    nc, nh = s // chunk, h // ht
+
+    # layouts: x -> (B, H/Ht, S, Ht, P)? keep (B,S,H,P) and block on S and H.
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    y, hfin = pl.pallas_call(
+        kern,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, ht, p), lambda b_, hi, ci: (b_, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, ht), lambda b_, hi, ci: (b_, ci, hi)),
+            pl.BlockSpec((1, ht), lambda b_, hi, ci: (0, hi)),
+            pl.BlockSpec((1, chunk, n), lambda b_, hi, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, hi, ci: (b_, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, ht, p), lambda b_, hi, ci: (b_, ci, hi, 0)),
+            pl.BlockSpec((1, ht, p, n), lambda b_, hi, ci: (b_, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((ht, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A[None], Bm, C)
+    return y, hfin

@@ -1,0 +1,4 @@
+"""Oracles: the chunked-parallel SSD and the sequential recurrence from
+the model zoo (one source of truth)."""
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref  # noqa: F401
+from repro.models.ssm import ssd_ref as ssd_sequential_ref   # noqa: F401

@@ -1,0 +1,88 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation (the dry-run contract)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.model import init_cache_logical
+from repro.models.params import abstract_params
+from repro.parallel.sharding import (CONTEXT_PARALLEL_OVERRIDES,
+                                     logical_to_spec, named_sharding,
+                                     tree_shardings)
+
+Spec = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Spec]:
+    """Training/prefill batch: tokens/labels/mask (+ frontend embeds)."""
+    b, s = shape.global_batch, shape.seq_len
+    ft = cfg.frontend_tokens if cfg.frontend else 0
+    s_text = s - ft
+    cb = cfg.num_codebooks
+    tok_shape = (b, s_text, cb) if cb > 1 else (b, s_text)
+    lab_shape = (b, s, cb) if cb > 1 else (b, s)
+    out = {
+        "tokens": Spec(tok_shape, jnp.int32),
+        "labels": Spec(lab_shape if ft else tok_shape, jnp.int32),
+        "loss_mask": Spec((b, s), jnp.float32),
+    }
+    if ft:
+        out["frontend_embeds"] = Spec((b, ft, cfg.d_model), jnp.float32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = named_sharding(logical, mesh, dim_sizes=v.shape)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 cache_dtype=jnp.bfloat16) -> Tuple[Dict[str, Spec], Any, Spec]:
+    """(token specs, cache specs, pos spec) for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cb = cfg.num_codebooks
+    tok_shape = (b, 1, cb) if cb > 1 else (b, 1)
+    tokens = {"tokens": Spec(tok_shape, jnp.int32)}
+    cache = M.abstract_cache(cfg, b, s, cache_dtype)[0]
+    return tokens, cache, Spec((), jnp.int32)
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     context_parallel: bool = False):
+    overrides = {}
+    if context_parallel:
+        overrides.update(CONTEXT_PARALLEL_OVERRIDES)
+    elif cfg.num_kv_heads and "model" in mesh.shape and \
+            cfg.num_kv_heads % mesh.shape["model"] != 0:
+        # KV heads don't divide TP: shard the cache on its sequence dim
+        # instead of replicating 16 copies (paper: place the value store
+        # on the path where reads stay cheap; avoids the all-gather of
+        # the entire cache every step).
+        overrides["kv_seq"] = "model"
+    overrides = overrides or None
+    tokens, cache, _ = decode_specs(cfg, shape)
+    tok_sh = {k: named_sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                mesh, dim_sizes=v.shape, overrides=overrides)
+              for k, v in tokens.items()}
+    cache_logical = init_cache_logical(cfg)
+    cache_sh = jax.tree.map(
+        lambda lg, spec: named_sharding(lg, mesh, dim_sizes=spec.shape,
+                                        overrides=overrides),
+        cache_logical, cache,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return tok_sh, cache_sh
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    shapes, logical = abstract_params(cfg)
+    return shapes, logical, tree_shardings(logical, shapes, mesh)

@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Importing this module never touches jax device state — meshes are built
+by functions, so the dry-run's XLA_FLAGS device-count override (set
+before any jax import) is the only device configuration in play.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,120 @@
+"""Training launcher.
+
+Two modes:
+- production: the assigned mesh (16x16 / 2x16x16); on real TPU hardware
+  this is the entry point a cluster scheduler invokes per host.
+- local: reduced config + small mesh on whatever devices exist (CPU
+  container: set JAX_PLATFORMS=cpu and --devices N with the host-device
+  override) — the end-to-end example drivers use this.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --shape train_4k --steps 100 --reduced --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, RunConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.launch.inputs import batch_shardings, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models.params import init_params, num_groups
+from repro.optim.adamw import adamw_init
+from repro.parallel.sharding import tree_shardings
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer
+
+
+def build(cfg, run: RunConfig, shape: ShapeConfig, mesh, *, impl="auto"):
+    """Init sharded state + jitted step for (cfg, mesh)."""
+    from repro.launch.dryrun import _opt_logical  # reuse
+    with jax.set_mesh(mesh):
+        _, logical, psh = param_shardings(cfg, mesh)
+        params, _ = init_params(cfg, jax.random.PRNGKey(run.seed))
+        params = jax.device_put(params, psh)
+        opt = adamw_init(params, moments="int8" if run.moments_int8 else "f32")
+        opt_sh = tree_shardings(_opt_logical(logical, run.moments_int8),
+                                jax.eval_shape(lambda: opt), mesh)
+        opt = jax.device_put(opt, opt_sh)
+        bsh = batch_shardings(cfg, shape, mesh)
+        step = jax.jit(make_train_step(cfg, run, impl=impl, mesh=mesh),
+                       in_shardings=(psh, opt_sh, bsh, None),
+                       out_shardings=(psh, opt_sh, None),
+                       donate_argnums=(0, 1))
+
+        def put_batch(b):
+            return {k: jax.device_put(jnp.asarray(v), bsh[k]) for k, v in b.items()}
+
+    return params, opt, step, put_batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU example mode)")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--pod-sync", default="auto", choices=["auto", "compressed"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-replicas", type=int, default=0)
+    ap.add_argument("--log", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = SHAPES[args.shape]
+    if args.batch or args.seq:
+        shape = ShapeConfig("custom", args.seq or shape.seq_len,
+                            args.batch or shape.global_batch, "train")
+
+    n_dev = len(jax.devices())
+    if n_dev >= 512 and args.multi_pod:
+        mesh = make_production_mesh(multi_pod=True)
+    elif n_dev >= 256:
+        mesh = make_production_mesh()
+    else:  # local mode: best small mesh
+        from repro.ft.elastic import best_mesh_for, make_mesh
+        shp, names = best_mesh_for(n_dev, model=min(2, n_dev),
+                                   prefer_pods=2 if args.multi_pod else 1)
+        mesh = make_mesh(shp, names)
+    print(f"[train] mesh={dict(mesh.shape)} devices={n_dev}")
+
+    run = RunConfig(learning_rate=args.lr, total_steps=args.steps,
+                    warmup_steps=max(2, args.steps // 10),
+                    microbatch=args.microbatch, pod_sync=args.pod_sync,
+                    ckpt_every=args.ckpt_every)
+    params, opt, step, put_batch = build(cfg, run, shape, mesh)
+
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every,
+                                 replicas=args.ckpt_replicas)
+    with jax.set_mesh(mesh):
+        tr = Trainer(cfg, run, shape, step_fn=step, params=params,
+                     opt_state=opt, put_batch=put_batch, ckpt=ckpt,
+                     log_path=args.log or None)
+        tr.run_steps(args.steps - tr.start_step)
+    last = tr.history[-1]
+    print(f"[train] done: step={last['step']} loss={last['loss']:.4f} "
+          f"({last['seconds']*1e3:.0f} ms/step)")
+    return tr
+
+
+if __name__ == "__main__":
+    main()

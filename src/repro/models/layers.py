@@ -1,0 +1,100 @@
+"""Shared layer primitives: RMSNorm, RoPE, MLP, row-parallel projection."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models import precision
+from repro.parallel.sharding import get_abstract_mesh
+
+
+def row_parallel(subscripts: str, x: jax.Array, w: jax.Array,
+                 x_shard_dim: int, w_shard_dim: int = 0) -> jax.Array:
+    """TP row-parallel einsum with an **explicit bf16 psum** over the
+    `model` axis (§Perf "bf16 collectives": XLA-CPU otherwise emits the
+    partial-sum all-reduce in f32 between its accumulating dot and the
+    downcast — 2x wire bytes, plus a redundant backward AR).
+
+    Inside the manual region the backward pass needs no collective at
+    all (dy is replicated; dx/dw are shard-local), halving TP traffic
+    again. Falls back to a plain einsum when the policy is off, there is
+    no model axis, or the sharded dims don't divide.
+    """
+    mesh = get_abstract_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    seq = x.shape[1]
+    applicable = (precision.enabled() and msize > 1
+                  and x.shape[x_shard_dim] % msize == 0
+                  and w.shape[w_shard_dim] % msize == 0
+                  and seq % msize == 0)
+    if not applicable:
+        return jnp.einsum(subscripts, x, w)
+
+    def inner(x_l, w_l):
+        y_part = jnp.einsum(subscripts, x_l, w_l)       # (B, S, D) partial
+        # One explicit forward psum (f32: XLA CPU's AllReducePromotion
+        # crashes on narrower reduce collectives, and would promote them
+        # anyway). The win vs leaving it to auto-SPMD: the backward of
+        # psum is identity — dy is replicated and dx/dw are shard-local,
+        # so the baseline's *paired* forward+backward all-reduce becomes
+        # a single forward one. (A seq-sharded output variant was tried
+        # and refuted: resharding churn cost 13x — see EXPERIMENTS §Perf.)
+        return jax.lax.psum(y_part.astype(jnp.float32), "model")
+
+    def spec_for(arr, dim):
+        return P(*[("model" if i == dim else None) for i in range(arr.ndim)])
+
+    # f32 at the manual boundary: bf16 values crossing a shard_map edge
+    # trip the same promotion-pass bug (see variant matrix in §Perf log)
+    y = shard_map(inner, mesh=mesh,
+                  in_specs=(spec_for(x, x_shard_dim), spec_for(w, w_shard_dim)),
+                  out_specs=P(), axis_names={"model"},
+                  check_vma=False)(x.astype(jnp.float32), w.astype(jnp.float32))
+    return y.astype(jnp.bfloat16)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(q: jax.Array, positions: jax.Array, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding, half-split (NeoX) layout on the first
+    ``fraction`` of head dims. q (..., S, H, hd); positions (S,) or (B,S)."""
+    hd = q.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return q
+    qr, qp = q[..., :rot], q[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over heads: (..., S, 1, half)
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    q1, q2 = qr[..., :half], qr[..., half:]
+    out = jnp.concatenate([q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(q.dtype), qp], axis=-1)
+
+
+def activation_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def mlp(x: jax.Array, params: dict, activation) -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU). w_in (D,2,F), w_out (F,D)."""
+    xc = x.astype(jnp.bfloat16)
+    h = jnp.einsum("bsd,dtf->bstf", xc, params["w_in"].astype(jnp.bfloat16))
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = activation(gate) * up
+    out = row_parallel("bsf,fd->bsd", h, params["w_out"].astype(jnp.bfloat16),
+                       x_shard_dim=2, w_shard_dim=0)
+    return out.astype(x.dtype)

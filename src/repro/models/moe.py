@@ -1,0 +1,270 @@
+"""Mixture-of-Experts with capacity-based dispatch.
+
+Two execution paths:
+
+- no mesh (CPU tests): plain local dispatch (`_moe_local`).
+- mesh: **explicit expert parallelism** in a fully-manual shard_map.
+  Activations are replicated across the TP ("model") axis in this
+  framework, so every model shard already holds the tokens: each shard
+  routes identically, selects only the tokens belonging to *its* experts
+  (E/TP of them), computes locally, and a single psum over the model
+  axis combines partial outputs. Token traffic per layer is exactly one
+  all-reduce of the activation — no all-to-all, no cross-shard cumsum.
+  FSDP weight gathers (data axis) happen explicitly inside the body so
+  the collective schedule is fully visible to the characterizer.
+
+Skew note (paper Advice #1): Zipfian routing collapses throughput on the
+"wimpy" path exactly like DDIO-less SoC writes; capacity factors bound
+the damage and benchmarks/bench_skew.py quantifies it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import get_abstract_mesh
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array        # load-balancing loss
+    dropped_frac: jax.Array    # fraction of (token,k) assignments dropped
+    expert_load: jax.Array     # (E,) fraction of assignments per expert
+
+
+def router_topk(x2d: jax.Array, w_router: jax.Array, k: int):
+    """x2d (T,D); returns (weights (T,k) renormalized, idx (T,k), probs (T,E))."""
+    logits = (x2d.astype(jnp.float32) @ w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    f = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(idx.size, 1)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _capacity(t: int, k: int, e: int, capacity_factor: Optional[float]) -> int:
+    if capacity_factor is None:
+        return t
+    return max(1, -(-int(capacity_factor * t * k) // e))
+
+
+def _expert_compute(buf_e: jax.Array, w_in: jax.Array, w_out: jax.Array,
+                    activation) -> jax.Array:
+    """buf_e (E?, C, D) x w_in (E?, D, 2, F) -> (E?, C, D)."""
+    h = jnp.einsum("ecd,edtf->ectf", buf_e.astype(jnp.bfloat16),
+                   w_in.astype(jnp.bfloat16))
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = activation(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(jnp.bfloat16))
+
+
+def _dispatch_compute_combine(x2d, weights, idx, *, lo, e_local, cap,
+                              w_in, w_out, activation):
+    """Scatter tokens routed to experts [lo, lo+e_local) into a capacity
+    buffer, run them, and combine weighted outputs back to token order.
+    `lo` may be a tracer (axis_index); `e_local` must be static.
+    Returns (y (T,D) f32, kept mask, is_mine mask over (T*k,))."""
+    t, d = x2d.shape
+    k = idx.shape[1]
+    flat_e = idx.reshape(t * k)
+    is_mine = (flat_e >= lo) & (flat_e < lo + e_local)
+    eff = jnp.where(is_mine, flat_e - lo, e_local)            # trash bucket
+    onehot = jax.nn.one_hot(eff, e_local + 1, dtype=jnp.int32)[:, :e_local]
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1   # (T*k,)
+    keep = is_mine & (pos < cap) & (pos >= 0)
+    slot = jnp.where(keep, eff * cap + pos, e_local * cap)
+
+    x_rep = jnp.repeat(x2d, k, axis=0)
+    buf = jnp.zeros((e_local * cap + 1, d), x2d.dtype).at[slot].set(
+        x_rep.astype(x2d.dtype))
+    out = _expert_compute(buf[:e_local * cap].reshape(e_local, cap, d),
+                          w_in, w_out, activation)
+    out_flat = jnp.concatenate(
+        [out.reshape(e_local * cap, d),
+         jnp.zeros((1, d), out.dtype)], axis=0)
+    y_rep = out_flat[slot] * keep[:, None]
+    y = (y_rep.reshape(t, k, d).astype(jnp.float32)
+         * weights[..., None]).sum(axis=1)
+    return y, keep, is_mine
+
+
+def replicate_hot_experts(idx: jax.Array, probs: jax.Array, *,
+                          num_experts: int, replicas: int,
+                          num_hot: int = 2):
+    """Paper Advice #1 made executable: under skewed routing, assignments
+    to the `num_hot` most-loaded experts are split round-robin across
+    `replicas` *virtual* experts, each with its own capacity queue —
+    DrTM-KV's "replicate a few hot keys to tame the skewness".
+
+    Returns (virtual idx (T,k) over E + num_hot*(replicas-1) experts,
+    parent map (E_virt,) so weights can be gathered per virtual expert).
+    """
+    e = num_experts
+    if replicas <= 1 or num_hot <= 0:
+        return idx, jnp.arange(e)
+    t, k = idx.shape
+    # hottest experts by realized assignment count
+    counts = jnp.zeros((e,), jnp.int32).at[idx.reshape(-1)].add(1)
+    _, hot = jax.lax.top_k(counts, num_hot)                   # (num_hot,)
+    # virtual expert table: parents[e + h*(replicas-1) + r] = hot[h]
+    parents = jnp.concatenate(
+        [jnp.arange(e)] + [hot] * (replicas - 1))             # (E_virt,)
+    # round-robin over (token, slot) — mixing row and column indices so
+    # the cycle never locks to the top-k column parity
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(k)[None, :]
+    rep = (rows + cols) % replicas                            # (T,k)
+    hot_slot = jnp.argmax(idx[..., None] == hot[None, None, :], axis=-1)
+    is_hot = (idx[..., None] == hot[None, None, :]).any(-1)
+    virt = jnp.where(
+        is_hot & (rep > 0),
+        e + hot_slot * (replicas - 1) + (rep - 1),
+        idx)
+    return virt, parents
+
+
+def _moe_local(x: jax.Array, params: dict, *, num_experts: int, top_k: int,
+               activation, capacity_factor: Optional[float],
+               hot_expert_replicas: int = 1):
+    b, s, d = x.shape
+    e, k = num_experts, top_k
+    t = b * s
+    x2d = x.reshape(t, d)
+    weights, idx, probs = router_topk(x2d, params["router"], k)
+    aux = load_balance_loss(probs, idx, e)
+    cap = _capacity(t, k, e, capacity_factor)
+    w_in, w_out = params["w_in"], params["w_out"]
+    didx = idx
+    if hot_expert_replicas > 1:
+        didx, parents = replicate_hot_experts(
+            idx, probs, num_experts=e, replicas=hot_expert_replicas)
+        w_in = w_in[parents]
+        w_out = w_out[parents]
+        e = parents.shape[0]
+    y, keep, _ = _dispatch_compute_combine(
+        x2d, weights, didx, lo=0, e_local=e, cap=cap,
+        w_in=w_in, w_out=w_out, activation=activation)
+    flat_e = idx.reshape(-1)
+    load = (jnp.zeros((num_experts,), jnp.float32).at[flat_e].add(1.0)
+            / jnp.maximum(flat_e.size, 1))
+    metrics = MoEMetrics(aux_loss=aux, dropped_frac=1.0 - keep.mean(),
+                         expert_load=load)
+    return y.reshape(b, s, d).astype(x.dtype), metrics
+
+
+def moe_ffn(x: jax.Array, params: dict, *, num_experts: int, top_k: int,
+            activation, capacity_factor: Optional[float] = 1.25,
+            hot_expert_replicas: int = 1,
+            ) -> tuple[jax.Array, MoEMetrics]:
+    """x (B,S,D) -> (B,S,D). See module docstring for the EP scheme.
+    hot_expert_replicas > 1 enables Advice-#1 hot-expert replication
+    (local dispatch path; the EP path balances by shard ownership)."""
+    mesh = get_abstract_mesh()
+    e = num_experts
+    if mesh is None or not mesh.shape:
+        return _moe_local(x, params, num_experts=e, top_k=top_k,
+                          activation=activation,
+                          capacity_factor=capacity_factor,
+                          hot_expert_replicas=hot_expert_replicas)
+
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if a in mesh.shape and mesh.shape[a] > 1)
+    rem = x.shape[0]
+    bax = []
+    for a in batch_axes:
+        if rem % mesh.shape[a] == 0:
+            bax.append(a)
+            rem //= mesh.shape[a]
+    ep = msize > 1 and e % msize == 0
+    if not (ep or bax):
+        return _moe_local(x, params, num_experts=e, top_k=top_k,
+                          activation=activation,
+                          capacity_factor=capacity_factor,
+                          hot_expert_replicas=hot_expert_replicas)
+
+    e_local = e // msize if ep else e
+    bspec = tuple(bax) if len(bax) > 1 else (bax[0] if bax else None)
+    has_data = "data" in mesh.shape and dsize > 1
+
+    def inner(x, router, w_in, w_out):
+        # x (B_loc, S, D); router (D_loc?, E); w_in (E_loc, D_loc?, 2, F)
+        if has_data:   # explicit FSDP gathers (visible to the characterizer)
+            router = jax.lax.all_gather(router, "data", axis=0, tiled=True)
+            w_in = jax.lax.all_gather(w_in, "data", axis=1, tiled=True)
+            w_out = jax.lax.all_gather(w_out, "data", axis=2, tiled=True)
+        b_loc, s_loc, d = x.shape
+        t = b_loc * s_loc
+        x2d = x.reshape(t, d)
+        weights, idx, probs = router_topk(x2d, router, top_k)
+        aux = load_balance_loss(probs, idx, e)
+        cap = _capacity(t, top_k, e, capacity_factor)
+        if ep:
+            widx = jax.lax.axis_index("model")
+            y, keep, is_mine = _dispatch_compute_combine(
+                x2d, weights, idx, lo=widx * e_local, e_local=e_local,
+                cap=cap, w_in=w_in, w_out=w_out, activation=activation)
+            y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
+            kept = jax.lax.psum(jnp.sum(keep), "model")
+            dropped = 1.0 - kept / idx.size
+        else:
+            y, keep, _ = _dispatch_compute_combine(
+                x2d, weights, idx, lo=0, e_local=e, cap=cap,
+                w_in=w_in, w_out=w_out, activation=activation)
+            dropped = 1.0 - keep.mean()
+        flat_e = idx.reshape(-1)
+        load = (jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+                / jnp.maximum(flat_e.size, 1))
+        for ax in bax:
+            aux = jax.lax.pmean(aux, ax)
+            dropped = jax.lax.pmean(dropped, ax)
+            load = jax.lax.pmean(load, ax)
+        return y.reshape(b_loc, s_loc, d).astype(x.dtype), \
+            MoEMetrics(aux_loss=aux, dropped_frac=dropped, expert_load=load)
+
+    dspec = "data" if has_data else None
+    especk = "model" if ep else None
+    in_specs = (P(bspec, None, None),            # x: replicated over model
+                P(dspec, None),                  # router (D fsdp)
+                P(especk, dspec, None, None),    # w_in (E ep, D fsdp)
+                P(especk, None, dspec))          # w_out (E ep, F, D fsdp)
+    out_specs = (P(bspec, None, None),
+                 MoEMetrics(aux_loss=P(), dropped_frac=P(), expert_load=P(None)))
+    # fully manual: leaving any axis (e.g. pod when batch=1) to the auto
+    # partitioner makes axis_index lower to a PartitionId the surrounding
+    # SPMD pass refuses to partition.
+    manual = set(mesh.axis_names)
+    return shard_map(inner, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, axis_names=manual,
+                     check_vma=False)(x, params["router"], params["w_in"],
+                                      params["w_out"])
+
+
+def moe_ffn_dense_ref(x: jax.Array, params: dict, *, num_experts: int,
+                      top_k: int, activation) -> jax.Array:
+    """Oracle: dense per-expert compute, no capacity drops. For tests."""
+    b, s, d = x.shape
+    e, k = num_experts, top_k
+    x2d = x.reshape(b * s, d)
+    weights, idx, _ = router_topk(x2d, params["router"], k)
+    w_in, w_out = params["w_in"], params["w_out"]
+    y = jnp.zeros((b * s, d), jnp.float32)
+    for ei in range(e):
+        h = jnp.einsum("xd,dgf->xgf", x2d.astype(jnp.float32),
+                       w_in[ei].astype(jnp.float32))
+        gate, up = h[..., 0, :], h[..., 1, :]
+        o = (activation(gate) * up) @ w_out[ei].astype(jnp.float32)
+        wsum = (jnp.where(idx == ei, weights, 0.0)).sum(-1)   # (T,)
+        y += o * wsum[:, None]
+    return y.reshape(b, s, d).astype(x.dtype)

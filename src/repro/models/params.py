@@ -1,0 +1,235 @@
+"""Parameter initialization + logical sharding axes.
+
+Layers are stacked for ``lax.scan``: the layer pattern has a *period*
+(gemma2 local/global = 2, jamba = 8, others = 1); ``params["layers"]`` is
+a tuple of per-slot trees whose leaves carry a leading ``G = L/period``
+group dim. A parallel tree of logical-axis tuples drives sharding
+(see parallel/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def layer_period(cfg: ModelConfig) -> int:
+    period = 1
+    for p in (cfg.attn_period, cfg.local_global_period,
+              cfg.moe_period if cfg.num_experts else 1):
+        if p:
+            period = math.lcm(period, p)
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    return period
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    return cfg.num_layers // layer_period(cfg)
+
+
+def slot_kind(cfg: ModelConfig, slot: int) -> Dict[str, Any]:
+    """Static description of the layer at period-slot `slot`."""
+    return dict(
+        kind=cfg.layer_kind(slot),
+        local=cfg.is_local_layer(slot),
+        moe=cfg.is_moe_layer(slot),
+        has_ffn=bool(cfg.d_ff),
+    )
+
+
+# ----------------------------------------------------------------------
+def _norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def _attn_shapes(cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": ((d, hq, hd), ("fsdp", "heads", None)),
+        "wk": ((d, hkv, hd), ("fsdp", "kv_heads", None)),
+        "wv": ((d, hkv, hd), ("fsdp", "kv_heads", None)),
+        "wo": ((hq, hd, d), ("heads", None, "fsdp")),
+    }
+    return shapes
+
+
+def _mlp_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": ((d, 2, f), ("fsdp", None, "mlp")),
+        "w_out": ((f, d), ("mlp", "fsdp")),
+    }
+
+
+def _moe_shapes(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ((d, e), ("fsdp", None)),
+        "w_in": ((e, d, 2, f), ("experts", "fsdp", None, None)),
+        "w_out": ((e, f, d), ("experts", None, "fsdp")),
+    }
+
+
+def _ssm_shapes(cfg: ModelConfig):
+    d, din, n, h, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_conv)
+    return {
+        "w_xz": ((d, 2, din), ("fsdp", None, "ssm_inner")),
+        "w_bc": ((d, 2, n), ("fsdp", None, None)),
+        "w_dt": ((d, h), ("fsdp", "ssm_inner")),
+        "conv_x": ((k, din), (None, "ssm_inner")),
+        "conv_b": ((k, n), (None, None)),
+        "conv_c": ((k, n), (None, None)),
+        "A_log": ((h,), ("ssm_inner",)),
+        "D": ((h,), ("ssm_inner",)),
+        "dt_bias": ((h,), ("ssm_inner",)),
+        "norm": ((din,), ("ssm_inner",)),
+        "out": ((din, d), ("ssm_inner", "fsdp")),
+    }
+
+
+def _init_dense(key, shape, fan_in):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / math.sqrt(max(fan_in, 1))))
+
+
+def _init_slot(cfg: ModelConfig, slot: int, key) -> Tuple[dict, dict]:
+    """One (un-stacked) layer's params + logical axes for period-slot."""
+    kind = slot_kind(cfg, slot)
+    params, logical = {}, {}
+    params["norm1"], logical["norm1"] = _norm(cfg.d_model)
+
+    keys = jax.random.split(key, 24)
+    ki = iter(range(24))
+
+    if kind["kind"] == "attn":
+        shapes = _attn_shapes(cfg)
+        sub_p, sub_l = {}, {}
+        for name, (shp, lg) in shapes.items():
+            fan_in = shp[0] if name != "wo" else cfg.q_dim
+            sub_p[name] = _init_dense(keys[next(ki)], shp, fan_in)
+            sub_l[name] = lg
+        params["attn"], logical["attn"] = sub_p, sub_l
+    else:
+        shapes = _ssm_shapes(cfg)
+        sub_p, sub_l = {}, {}
+        for name, (shp, lg) in shapes.items():
+            k = keys[next(ki)]
+            if name == "A_log":
+                # A in [1, 16] (mamba2 init)
+                sub_p[name] = jnp.log(jax.random.uniform(k, shp, jnp.float32, 1.0, 16.0))
+            elif name == "dt_bias":
+                # dt in [1e-3, 1e-1] through softplus
+                u = jax.random.uniform(k, shp, jnp.float32)
+                dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+                sub_p[name] = dt + jnp.log(-jnp.expm1(-dt))
+            elif name in ("D", "norm"):
+                sub_p[name] = jnp.ones(shp, jnp.float32)
+            elif name.startswith("conv"):
+                sub_p[name] = _init_dense(k, shp, cfg.ssm_conv)
+            else:
+                sub_p[name] = _init_dense(k, shp, shp[0])
+            sub_l[name] = lg
+        params["ssm"], logical["ssm"] = sub_p, sub_l
+
+    if kind["has_ffn"]:
+        params["norm2"], logical["norm2"] = _norm(cfg.d_model)
+        shapes = _moe_shapes(cfg) if kind["moe"] else _mlp_shapes(cfg)
+        sub_p, sub_l = {}, {}
+        for name, (shp, lg) in shapes.items():
+            fan_in = cfg.d_model if name in ("router", "w_in") else cfg.d_ff
+            sub_p[name] = _init_dense(keys[next(ki)], shp, fan_in)
+            sub_l[name] = lg
+        key_name = "moe" if kind["moe"] else "mlp"
+        params[key_name], logical[key_name] = sub_p, sub_l
+
+    return params, logical
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[PyTree, PyTree]:
+    """Returns (params, logical_axes) with identical tree structure.
+
+    Logical-axis leaves are tuples with one entry per array dim (the
+    stacked layer leaves get a leading "layer_group" entry).
+    """
+    period = layer_period(cfg)
+    g = num_groups(cfg)
+    kall = jax.random.split(key, period + 3)
+
+    # embedding (+ codebooks for musicgen)
+    vshape = ((cfg.num_codebooks, cfg.vocab_size, cfg.d_model)
+              if cfg.num_codebooks > 1 else (cfg.vocab_size, cfg.d_model))
+    vlogical = ((None, "vocab", "fsdp") if cfg.num_codebooks > 1
+                else ("vocab", "fsdp"))
+    params: dict = {"embed": {"table": jax.random.normal(kall[0], vshape, jnp.float32) * 0.02}}
+    logical: dict = {"embed": {"table": vlogical}}
+
+    layers_p, layers_l = [], []
+    for slot in range(period):
+        gk = jax.random.split(kall[1 + slot], g)
+        stacked = jax.vmap(lambda k: _init_slot(cfg, slot, k)[0])(gk)
+        _, slot_logical = _init_slot(cfg, slot, gk[0])
+        slot_logical = jax.tree.map(
+            lambda lg: ("layer_group",) + lg, slot_logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        layers_p.append(stacked)
+        layers_l.append(slot_logical)
+    params["layers"] = tuple(layers_p)
+    logical["layers"] = tuple(layers_l)
+
+    params["final_norm"], logical["final_norm"] = _norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": jax.random.normal(kall[-1], vshape, jnp.float32) * 0.02}
+        logical["lm_head"] = {"w": vlogical}
+    return params, logical
+
+
+def param_count_tree(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    """ShapeDtypeStruct version of init_params — no allocation (dry-run)."""
+    out_shape = jax.eval_shape(lambda k: init_params(cfg, k)[0],
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+    _, logical = _logical_only(cfg)
+    return out_shape, logical
+
+
+def _logical_only(cfg: ModelConfig):
+    """Logical-axis tree without touching any arrays (dry-run safe)."""
+    vlogical = ((None, "vocab", "fsdp") if cfg.num_codebooks > 1
+                else ("vocab", "fsdp"))
+    logical: dict = {"embed": {"table": vlogical}}
+    logical["layers"] = tuple(_slot_logical(cfg, slot)
+                              for slot in range(layer_period(cfg)))
+    logical["final_norm"] = {"scale": ("embed",)}
+    if not cfg.tie_embeddings:
+        logical["lm_head"] = {"w": vlogical}
+    return None, logical
+
+
+def _slot_logical(cfg: ModelConfig, slot: int):
+    kind = slot_kind(cfg, slot)
+    logical = {"norm1": {"scale": ("embed",)}}
+    if kind["kind"] == "attn":
+        logical["attn"] = {n: lg for n, (s, lg) in _attn_shapes(cfg).items()}
+    else:
+        logical["ssm"] = {n: lg for n, (s, lg) in _ssm_shapes(cfg).items()}
+    if kind["has_ffn"]:
+        logical["norm2"] = {"scale": ("embed",)}
+        if kind["moe"]:
+            logical["moe"] = {n: lg for n, (s, lg) in _moe_shapes(cfg).items()}
+        else:
+            logical["mlp"] = {n: lg for n, (s, lg) in _mlp_shapes(cfg).items()}
+    return jax.tree.map(
+        lambda lg: ("layer_group",) + lg, logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,36 @@
+"""Numerics policy knobs for the §Perf hillclimb.
+
+``bf16_collectives()``: make every TP-boundary matmul emit bf16 directly
+(preferred_element_type), so the SPMD partitioner's partial-sum
+all-reduces move bf16 instead of f32 — the "send compressed over the
+contended path" advice applied to activation traffic. Accumulation
+still happens in f32 inside the dot; only the materialized/psummed
+result narrows.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax.numpy as jnp
+
+_BF16_COLLECTIVES = False
+
+
+@contextlib.contextmanager
+def bf16_collectives(enabled: bool = True):
+    global _BF16_COLLECTIVES
+    prev = _BF16_COLLECTIVES
+    _BF16_COLLECTIVES = enabled
+    try:
+        yield
+    finally:
+        _BF16_COLLECTIVES = prev
+
+
+def matmul_dtype():
+    """preferred_element_type for TP-boundary einsums (None = default)."""
+    return jnp.bfloat16 if _BF16_COLLECTIVES else None
+
+
+def enabled() -> bool:
+    return _BF16_COLLECTIVES

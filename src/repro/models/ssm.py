@@ -1,0 +1,129 @@
+"""Mamba2 / SSD (state-space duality) sequence mixing.
+
+``ssd_chunked`` is the chunked-parallel pure-JAX algorithm (arXiv:2405.21060
+Listing 1 structure): intra-chunk quadratic term + inter-chunk state
+recurrence. It doubles as the oracle for the ``ssd_scan`` Pallas kernel.
+
+Shapes: x (B,S,H,P) values; dt (B,S,H) post-softplus step sizes;
+A (H,) negative; Bm/C (B,S,N) input/output state projections (ngroups=1);
+state h (B,H,P,N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, C: jax.Array, *,
+                chunk: int = 256,
+                h0: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    g, L = sp // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(b, g, L, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, g, L, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, g, L, n)
+    Cf = C.astype(jnp.float32).reshape(b, g, L, n)
+
+    dA = dtf * A.astype(jnp.float32)                    # (B,G,L,H)
+    cum = jnp.cumsum(dA, axis=2)                        # (B,G,L,H)
+
+    # ---- intra-chunk (the quadratic/"attention-like" branch) ----
+    CB = jnp.einsum("bgtn,bgsn->bgts", Cf, Bf)          # (B,G,L,L)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,G,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+    scores = CB[..., None] * decay * dtf[:, :, None, :, :]
+    scores = jnp.where(tri[None, None, ..., None], scores, 0.0)
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", scores, xf)
+
+    # ---- chunk states ----
+    last = cum[:, :, -1:, :]                            # (B,G,1,H)
+    w = jnp.exp(last - cum) * dtf                       # (B,G,L,H)
+    states = jnp.einsum("bgsh,bgsn,bgshp->bghpn", w, Bf, xf)  # (B,G,H,P,N)
+
+    # ---- inter-chunk recurrence over G ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])             # (B,G,H)
+    hinit = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(hprev, inp):
+        dec, st = inp                                   # (B,H), (B,H,P,N)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    hfinal, hprevs = jax.lax.scan(
+        step, hinit, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                      # (B,G,H,P,N) state entering chunk g
+
+    y_inter = jnp.einsum("bgtn,bghpn->bgthp", Cf, hprevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), hfinal
+
+
+def ssd_decode_step(xt: jax.Array, dtt: jax.Array, A: jax.Array,
+                    Bt: jax.Array, Ct: jax.Array, hstate: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. xt (B,H,P); dtt (B,H); Bt/Ct (B,N);
+    hstate (B,H,P,N). Returns (y (B,H,P), h')."""
+    xt = xt.astype(jnp.float32)
+    dtt = dtt.astype(jnp.float32)
+    dA = jnp.exp(dtt * A.astype(jnp.float32))           # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt.astype(jnp.float32), xt)
+    hnew = hstate * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), hnew)
+    return y, hnew
+
+
+def ssd_ref(x, dt, A, Bm, C, *, h0=None):
+    """Sequential O(S) reference recurrence (oracle for tests)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    hstate = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        y, hstate = ssd_decode_step(xt, dtt, A, Bt, Ct, hstate)
+        return hstate, y
+
+    hfinal, ys = jax.lax.scan(
+        step, hstate,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hfinal
+
+
+# ----------------------------------------------------------------------
+# depthwise causal conv (width K) used on x/B/C streams
+# ----------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,Ch), w (K,Ch) depthwise. Returns (y (B,S,Ch), new_state
+    (B,K-1,Ch) = last K-1 inputs, for decode continuation)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+K-1, Ch)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[-1]), x.dtype)
+    return y, new_state
+
+
+def causal_conv_step(xt: jax.Array, w: jax.Array,
+                     state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token conv. xt (B,Ch); state (B,K-1,Ch)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([state, xt[:, None]], axis=1)  # (B,K,Ch)
+    y = jnp.einsum("bkc,kc->bc", xp, w)
+    return y, xp[:, 1:]

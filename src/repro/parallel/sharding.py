@@ -1,0 +1,161 @@
+"""Logical-axis sharding: map logical tensor axes onto mesh axes.
+
+MaxText-style: every parameter/activation carries a tuple of *logical*
+axis names; `logical_to_physical` resolves them against the active mesh
+through RULES. Axes absent from the mesh degrade to replication, so the
+same model code runs on a 1-device CPU mesh, the 16x16 single-pod mesh
+and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+RULES = {
+    # weights
+    "fsdp": "data",              # weight dim sharded ZeRO-3 style
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",         # only when divisible; see below
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",        # mamba2 heads/d_inner
+    "layer_group": None,         # stacked-scan leading dim: never sharded
+    "flat_shard": ("data", "model"),  # 1-D fully-sharded (int8 moments)
+    "embed": None,               # d_model of activations / norm scales
+    # activations
+    "batch": ("pod", "data"),
+    "decode_batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,              # becomes "data" under context parallelism
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+}
+
+#: overrides for long-context decode (context parallelism): the KV cache /
+#: sequence dim shards over `data`, batch stays on `pod` only.
+CONTEXT_PARALLEL_OVERRIDES = {
+    "kv_seq": "data",
+    "batch": "pod",
+    "decode_batch": "pod",
+}
+
+
+def mesh_axis_size(mesh: Mesh, axis: Union[str, Tuple[str, ...], None]) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh_axis_size(mesh, a)
+        return n
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+_RULE_OVERRIDES: dict = {}
+
+
+def rule_overrides(overrides: dict):
+    """Context manager: temporarily remap logical axes (e.g. inside a
+    pod-manual shard_map region, "batch" must resolve to data only)."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def _ctx():
+        global _RULE_OVERRIDES
+        prev = dict(_RULE_OVERRIDES)
+        _RULE_OVERRIDES.update(overrides)
+        try:
+            yield
+        finally:
+            _RULE_OVERRIDES = prev
+    return _ctx()
+
+
+def logical_to_spec(logical: Sequence[Optional[str]], mesh: Mesh,
+                    dim_sizes: Optional[Sequence[int]] = None,
+                    overrides: Optional[dict] = None) -> P:
+    """Resolve logical axes to a PartitionSpec under `mesh`.
+
+    A mesh axis is only used if (a) it exists in the mesh and (b) the
+    corresponding tensor dim is divisible by its size (when dim_sizes is
+    given) — otherwise that dim replicates. This implements e.g. the
+    Megatron rule "replicate KV heads when kv_heads < TP".
+    """
+    rules = dict(RULES)
+    rules.update(_RULE_OVERRIDES)
+    if overrides:
+        rules.update(overrides)
+    spec = []
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            spec.append(None)
+            continue
+        # keep only mesh axes that exist
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        axes = tuple(a for a in axes if a in mesh.shape and mesh.shape[a] > 1)
+        if not axes:
+            spec.append(None)
+            continue
+        if dim_sizes is not None:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim_sizes[i] % size != 0:
+                spec.append(None)      # not divisible -> replicate
+                continue
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def named_sharding(logical: Sequence[Optional[str]], mesh: Mesh,
+                   dim_sizes: Optional[Sequence[int]] = None,
+                   overrides: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, mesh, dim_sizes, overrides))
+
+
+def constrain(x: jax.Array, *logical: Optional[str],
+              overrides: Optional[dict] = None) -> jax.Array:
+    """with_sharding_constraint by logical axis names.
+
+    Looks up the ambient mesh (set via `jax.sharding.use_mesh` /
+    `with mesh:`). No-op outside jit or without a mesh.
+    """
+    mesh = get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    spec = logical_to_spec(logical, mesh, dim_sizes=x.shape, overrides=overrides)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def get_abstract_mesh() -> Optional[Mesh]:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+# ----------------------------------------------------------------------
+# Parameter pytree sharding: params are dicts whose leaves are
+# (array, logical_axes) pairs at init time; `tree_shardings` turns the
+# logical tree into NamedShardings for jit in_shardings / out_shardings.
+# ----------------------------------------------------------------------
+
+def tree_shardings(logical_tree, shape_tree, mesh: Mesh, overrides=None):
+    """Map a pytree of logical-axis tuples + matching shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda lg, shp: named_sharding(lg, mesh, dim_sizes=shp.shape, overrides=overrides),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )

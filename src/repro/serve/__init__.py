@@ -1,0 +1,2 @@
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.disagg import DisaggKV, KVStoreParams

@@ -1,0 +1,202 @@
+"""DrTM-KV on an off-path SmartNIC — the paper's §5.2 case study.
+
+A disaggregated key-value store with a cluster-chaining hash index
+(one READ usually locates the value) and five offload alternatives
+(paper Figure 16):
+
+  A1  client READ index on host + READ value on host          (path ①x2)
+  A2  client SEND to SoC; SoC walks index + DMA-reads value   (②+③*)
+  A3  A2 with the index held in SoC memory                    (②+③*)
+  A4  client READ index on SoC + READ value on host           (②+①)
+  A5  client READ index on SoC + READ value from SoC cache    (②x2)
+      (miss -> SoC returns the address; client falls back to A4)
+
+The data plane is real: numpy hash index (cluster chaining), value
+store, SoC-memory value cache with hot-key replication (Advice #1).
+The *performance* plane is the calibrated path model (latencies and
+per-endpoint rate caps from the paper's Figure 3/17 measurements),
+because this container has no RDMA fabric — every number used is listed
+in PathCosts and cross-checked against the paper in
+benchmarks/bench_kvserve.py. Throughput composition (e.g. A4+A5) goes
+through the §4.2 greedy planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.planner import Allocation, Alternative, PathPlanner, PathUse
+from repro.core.paths import PathSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PathCosts:
+    """Calibrated against the paper (64 B payloads, µs / Mop/s)."""
+    read_host_us: float = 2.6        # Fig 3: READ via ① on SNIC
+    read_soc_us: float = 2.2         # Fig 3: READ via ② (≈15% faster)
+    send_host_us: float = 3.6        # SEND/RECV ①
+    send_soc_us: float = 4.6         # SEND/RECV ② (wimpy SoC, §3.2)
+    dma_soc_host_us: float = 1.9     # ③* 64 B (§3.3)
+    read_host_rate: float = 100e6    # one-sided ops/s the host path sustains
+    read_soc_rate: float = 140e6     # §3.2: 1.08–1.48x faster to SoC
+    rnic_read_rate: float = 110e6    # plain ConnectX-6 one-sided ops/s
+    nic_core_rate: float = 195e6     # total NIC processing ops/s
+    mixed_nic_efficiency: float = 0.6  # §4.1: host+SoC endpoints share most
+    #                                    NIC cores; mixing costs efficiency
+    send_soc_rate: float = 21.6e6    # §5.2: SoC SEND/RECV cap
+    soc_cpu_rate: float = 25e6       # SoC index-walk ops/s
+    dma_rate: float = 30e6           # ③* small-payload ops/s (Fig 11)
+    concurrency_discount: float = 0.125  # §4.1: paths running concurrently
+    #                                      lose 7–15% on shared resources
+
+
+@dataclasses.dataclass
+class KVStoreParams:
+    n_keys: int = 100_000
+    value_bytes: int = 64
+    key_bytes: int = 8
+    buckets_factor: float = 1.5
+    soc_cache_keys: int = 10_000     # SoC memory capacity (values)
+    hot_replicas: int = 3            # Advice #1: replicate hot entries
+    zipf_theta: float = 0.99
+
+
+class DisaggKV:
+    """Real index/value arrays + modeled path costs."""
+
+    def __init__(self, params: KVStoreParams, costs: PathCosts = PathCosts(),
+                 seed: int = 0):
+        self.p, self.c = params, costs
+        rng = np.random.default_rng(seed)
+        n = params.n_keys
+        self.nbuckets = int(n * params.buckets_factor)
+        # cluster-chaining hash index: bucket -> up to 4 (key, addr) slots
+        self.index_keys = np.full((self.nbuckets, 4), -1, np.int64)
+        self.index_addr = np.zeros((self.nbuckets, 4), np.int64)
+        self.values = rng.integers(0, 256, size=(n, params.value_bytes),
+                                   dtype=np.uint8)
+        self.overflow: Dict[int, int] = {}
+        for k in range(n):
+            b = hash((k, 0x9E3779B9)) % self.nbuckets
+            slot = np.argmax(self.index_keys[b] == -1)
+            if self.index_keys[b, slot] == -1:
+                self.index_keys[b, slot] = k
+                self.index_addr[b, slot] = k
+            else:
+                self.overflow[k] = k
+        # SoC value cache: hottest keys under zipf (key id == hotness rank)
+        self.soc_cached = set(range(min(params.soc_cache_keys, n)))
+
+    # ------------------------------------------------------------------
+    def _index_lookup(self, key: int) -> Tuple[int, int]:
+        """Returns (addr, n_reads needed)."""
+        b = hash((key, 0x9E3779B9)) % self.nbuckets
+        hit = np.where(self.index_keys[b] == key)[0]
+        if hit.size:
+            return int(self.index_addr[b, hit[0]]), 1
+        return self.overflow[key], 2
+
+    def get(self, key: int, alternative: str) -> Tuple[np.ndarray, float]:
+        """Executes the data plane, returns (value, modeled latency s)."""
+        c = self.c
+        addr, nidx = self._index_lookup(key)
+        val = self.values[addr]
+        if alternative == "A1":
+            lat = nidx * c.read_host_us + c.read_host_us
+        elif alternative == "A2":
+            lat = c.send_soc_us + c.dma_soc_host_us
+        elif alternative == "A3":
+            lat = c.send_soc_us + c.dma_soc_host_us   # index walk on-SoC memory
+        elif alternative == "A4":
+            lat = nidx * c.read_soc_us + c.read_host_us
+        elif alternative == "A5":
+            if key in self.soc_cached:
+                lat = nidx * c.read_soc_us + c.read_soc_us
+            else:  # miss: SoC returns address, client READs host (=A4 tail)
+                lat = nidx * c.read_soc_us + c.read_host_us
+        else:
+            raise ValueError(alternative)
+        return val, lat * 1e-6
+
+    # ------------------------------------------------------------------
+    # throughput model (paper Fig 17b/18): planner alternatives
+    # ------------------------------------------------------------------
+    def paths(self) -> Dict[str, PathSpec]:
+        c = self.c
+        mk = lambda name, rate: PathSpec(name, "ici", None, 2, rate, 1e-6,
+                                         True, name)
+        return {
+            "host_read": mk("host_read", c.read_host_rate),
+            "soc_read": mk("soc_read", c.read_soc_rate),
+            "nic_cores": mk("nic_cores", c.nic_core_rate),
+            "soc_send": mk("soc_send", c.send_soc_rate),
+            "soc_cpu": mk("soc_cpu", c.soc_cpu_rate),
+            "dma": mk("dma", c.dma_rate),
+        }
+
+    def alternatives(self, reads_per_index: float = 1.0) -> Dict[str, Alternative]:
+        r = reads_per_index
+        return {
+            "A1": Alternative("A1", uses=[
+                PathUse("host_read", out_bytes=r + 1),
+                PathUse("nic_cores", out_bytes=r + 1)],
+                criteria={"latency_us": (r + 1) * self.c.read_host_us}),
+            "A2": Alternative("A2", uses=[
+                PathUse("soc_send", out_bytes=1), PathUse("soc_cpu", out_bytes=1),
+                PathUse("dma", out_bytes=1), PathUse("nic_cores", out_bytes=1)],
+                criteria={"latency_us": self.c.send_soc_us + self.c.dma_soc_host_us}),
+            "A3": Alternative("A3", uses=[
+                PathUse("soc_send", out_bytes=1), PathUse("soc_cpu", out_bytes=1),
+                PathUse("dma", out_bytes=1), PathUse("nic_cores", out_bytes=1)],
+                criteria={"latency_us": self.c.send_soc_us + self.c.dma_soc_host_us}),
+            "A4": Alternative("A4", uses=[
+                PathUse("soc_read", out_bytes=r), PathUse("host_read", out_bytes=1),
+                # mixed host+SoC endpoints underuse the shared NIC cores
+                PathUse("nic_cores",
+                        out_bytes=(r + 1) / self.c.mixed_nic_efficiency)],
+                criteria={"latency_us": r * self.c.read_soc_us + self.c.read_host_us}),
+            "A5": Alternative("A5", uses=[
+                PathUse("soc_read", out_bytes=r + 1),
+                PathUse("nic_cores", out_bytes=r + 1)],
+                criteria={"latency_us": (r + 1) * self.c.read_soc_us}),
+        }
+
+    def cache_hit_mass(self) -> float:
+        """Zipf probability mass of the SoC-cached (hottest) keys — the
+        fraction of gets A5 can serve."""
+        ranks = np.arange(1, self.p.n_keys + 1, dtype=np.float64)
+        w = 1.0 / ranks ** self.p.zipf_theta
+        w /= w.sum()
+        return float(w[:len(self.soc_cached)].sum())
+
+    def combined_a4_a5(self) -> Tuple[float, List]:
+        """Paper's winning combination: cache hits go A5, misses A4; the
+        hit fraction is the zipf mass of the cached keys ("cache misses
+        are rare", §5.2). Peak rate = min over resources of
+        budget / (m * A5_use + (1-m) * A4_use)."""
+        m = self.cache_hit_mass()
+        paths = self.paths()
+        alts = self.alternatives()
+        usage: Dict[str, float] = {}
+        touched: Dict[str, int] = {}
+        for frac, alt in ((m, alts["A5"]), (1 - m, alts["A4"])):
+            for u in alt.uses:
+                usage[u.path] = usage.get(u.path, 0.0) + frac * u.out_bytes
+                touched[u.path] = touched.get(u.path, 0) + 1
+        # §4.1: resources shared by concurrently-active paths lose 7–15%
+        disc = 1.0 - self.c.concurrency_discount
+        total = min(paths[p].bw * (disc if touched[p] > 1 else 1.0) / use
+                    for p, use in usage.items() if use > 0)
+        allocs = [Allocation("A5", m * total, "soc_read:out"),
+                  Allocation("A4", (1 - m) * total, "cache_miss_fraction")]
+        return total, allocs
+
+    def zipf_keys(self, n: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        # standard YCSB zipfian over key ranks
+        ranks = np.arange(1, self.p.n_keys + 1, dtype=np.float64)
+        w = 1.0 / ranks ** self.p.zipf_theta
+        w /= w.sum()
+        return rng.choice(self.p.n_keys, size=n, p=w)

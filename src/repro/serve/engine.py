@@ -1,0 +1,124 @@
+"""Batched serving engine: prefill + continuous-batching decode.
+
+Slot model: a fixed decode batch of ``slots``; each slot holds one
+request's cache rows. New requests prefill (per-request, bucketed
+lengths), their cache rows are spliced into the slot cache, and the
+decode step advances every active slot one token with per-row positions.
+
+Multi-path notes (DrTM-KV mapping): the KV cache is the "value store";
+decode's cache read is the hot path the disagg layer places (batch-
+sharded on ICI for decode_32k, sequence-sharded context-parallel for
+long_500k). Sampling is greedy or temperature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) or (S, C) token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, impl: str = "auto",
+                 cache_dtype=jnp.float32, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len, self.impl = slots, max_len, impl
+        self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
+        self.pos = jnp.zeros((slots,), jnp.int32)       # next write index
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, impl=impl))
+        self._prefill = jax.jit(
+            lambda p, t: M.prefill(cfg, p, t, max_len, impl=impl,
+                                   cache_dtype=cache_dtype),
+            static_argnames=())
+        self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _splice_cache(self, slot: int, row_cache):
+        """Copy a prefilled (batch=1) cache into slot `slot`."""
+        def put(dst, src):
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+        self.cache = jax.tree.map(put, self.cache, row_cache)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt)[None]          # (1, S[,C])
+                logits, cache1, npos = self._prefill(self.params, toks)
+                self._splice_cache(s, cache1)
+                self.pos = self.pos.at[s].set(npos)
+                tok = self._sample(logits[:, -1], req.temperature)
+                req.out_tokens.append(int(np.asarray(tok).reshape(-1)[0]))
+                self.active[s] = req
+                self.stats["prefill_tokens"] += int(toks.shape[1])
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns number
+        of active requests."""
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        cb = self.cfg.num_codebooks
+        last = np.zeros((self.slots,) + ((cb,) if cb > 1 else ()), np.int32)
+        for s in act:
+            t = self.active[s].out_tokens[-1]
+            last[s] = t
+        tokens = jnp.asarray(last)[:, None]                    # (B,1[,C])
+        logits, self.cache = self._decode(self.params, tokens, self.cache, self.pos)
+        self.pos = self.pos + jnp.asarray(
+            [1 if self.active[s] is not None else 0 for s in range(self.slots)],
+            jnp.int32)
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s in act:
+            req = self.active[s]
+            if req.temperature > 0:
+                tok = self._sample(logits[s:s + 1, 0], req.temperature)
+                val = np.asarray(tok).reshape(-1)
+            else:
+                val = nxt[s].reshape(-1)
+            req.out_tokens.append(int(val[0]) if val.size == 1 else val.tolist())
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    int(self.pos[s]) >= self.max_len - 1:
+                req.done = True
+                self.active[s] = None
+        return len(act)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return done

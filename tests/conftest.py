@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests run on the default single CPU device (the dry-run's 512-device
+# override is local to repro/launch/dryrun.py; multi-device checks run in
+# a subprocess — see test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,112 @@
+"""Checkpointing, replication, failure detection, elastic re-mesh."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ckpt.replication import plan_replication
+from repro.ft.manager import FaultToleranceManager
+from repro.ft.elastic import best_mesh_for
+from repro.ft.straggler import StragglerDetector
+
+
+def _tree(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    return {"a": jax.random.normal(ks[0], (16, 8)),
+            "nested": {"b": jax.random.normal(ks[1], (4,)),
+                       "c": jnp.asarray(3, jnp.int32)}}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    stats = save_checkpoint(str(tmp_path / "ck"), t, step=7)
+    assert stats["ratio"] <= 1.0
+    back, step = load_checkpoint(str(tmp_path / "ck"), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert jnp.array_equal(a, b)
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path / "ck"), t, step=1)
+    # flip a byte in the payload
+    fn = tmp_path / "ck" / "data.npz.zst"
+    raw = bytearray(fn.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    fn.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path / "ck"), t)
+
+
+def test_chain_replica_fallback(tmp_path):
+    """Primary destroyed -> restore from replica (LineFS chain)."""
+    t = _tree()
+    mgr = CheckpointManager(str(tmp_path / "primary"), every=1, replicas=2)
+    mgr.save(10, t, blocking=True)
+    # destroy the primary copy AND replica 0
+    shutil.rmtree(mgr._step_dir(10))
+    shutil.rmtree(mgr._step_dir(10, mgr.replica_dirs[0]))
+    back, step = mgr.restore(t)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert jnp.array_equal(a, b)
+
+
+def test_retention_gc(tmp_path):
+    t = _tree()
+    mgr = CheckpointManager(str(tmp_path / "p"), every=1, keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, t, blocking=True)
+    steps = mgr._complete_steps(mgr.dir)
+    assert steps == [2, 3]
+
+
+def test_failure_detection_and_recovery(tmp_path):
+    clock = {"t": 0.0}
+    mgr = CheckpointManager(str(tmp_path / "p"), every=1)
+    ft = FaultToleranceManager(mgr, timeout=5.0, clock=lambda: clock["t"])
+    for n in ("host0", "host1", "host2"):
+        ft.register(n, devices=8)
+    t = _tree()
+    mgr.save(42, t, blocking=True)
+    clock["t"] = 3.0
+    ft.heartbeat("host0"); ft.heartbeat("host1")     # host2 goes silent
+    clock["t"] = 7.0
+    failed = ft.check()
+    assert failed == ["host2"]
+    assert ft.alive_devices() == 16
+    back, resume = ft.recover(t)
+    assert resume == 43
+
+
+def test_elastic_mesh_choice():
+    assert best_mesh_for(512, model=16) == ((2, 16, 16), ("pod", "data", "model"))
+    assert best_mesh_for(256, model=16, prefer_pods=1) == ((16, 16), ("data", "model"))
+    # one host of 8 lost from 256: 248 = 31 * 8
+    shape, names = best_mesh_for(248, model=16)
+    assert np.prod(shape) <= 248 and shape[-1] <= 16
+
+
+def test_straggler_detection_and_rebalance():
+    det = StragglerDetector(threshold=1.5)
+    for _ in range(5):
+        det.observe("n0", 1.0); det.observe("n1", 1.1)
+        det.observe("n2", 1.0); det.observe("slow", 2.5)
+    assert det.stragglers() == ["slow"]
+    shares = det.rebalanced_shares(32)
+    assert sum(shares.values()) == 32
+    assert shares["slow"] < shares["n0"]
+
+
+def test_replication_plan_uses_compression_when_ratio_good():
+    good = plan_replication(ratio=0.3)
+    bad = plan_replication(ratio=0.95, soc_rate=2e9)
+    assert good.total_rate > 0
+    assert good.ranked[0] in ("A2", "A3")
+    # with poor ratio and a weak compressor, direct A3 must rank first
+    assert bad.ranked[0] == "A3"

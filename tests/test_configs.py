@@ -1,0 +1,81 @@
+"""Config registry + parameter-count parity."""
+import jax
+import pytest
+
+from repro.configs import SHAPES, all_configs, get_config, list_archs, shape_applicable
+from repro.models.params import init_params, layer_period, param_count_tree
+
+NAMEPLATE = {  # billions, from the assignment's public sources
+    "glm4-9b": (9.4, 0.1), "gemma2-9b": (9.24, 0.12), "gemma-7b": (8.54, 0.1),
+    "internlm2-1.8b": (1.89, 0.05), "granite-moe-1b-a400m": (1.33, 0.05),
+    "mamba2-2.7b": (2.7, 0.08), "jamba-1.5-large-398b": (398, 4.0),
+}
+
+
+def test_registry_complete():
+    assert len(list_archs()) == 10
+    for arch in list_archs():
+        cfg = get_config(arch)
+        assert cfg.name == arch
+        assert cfg.source
+
+
+@pytest.mark.parametrize("arch", list(NAMEPLATE))
+def test_param_counts_match_nameplate(arch):
+    want, tol = NAMEPLATE[arch]
+    got = get_config(arch).param_count() / 1e9
+    assert abs(got - want) < tol, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("granite-moe-1b-a400m")
+    assert 0.35 < cfg.active_param_count() / 1e9 < 0.5
+    jam = get_config("jamba-1.5-large-398b")
+    assert 85 < jam.active_param_count() / 1e9 < 100
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_config_init_matches_analytic(arch):
+    small = get_config(arch).reduced()
+    params, logical = init_params(small, jax.random.PRNGKey(0))
+    assert param_count_tree(params) == small.param_count()
+    # logical tree mirrors params tree
+    pl = jax.tree.leaves(params)
+    ll = jax.tree.leaves(
+        logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert len(pl) == len(ll)
+    for p, lg in zip(pl, ll):
+        assert len(lg) == p.ndim, (lg, p.shape)
+
+
+def test_layer_periods():
+    assert layer_period(get_config("gemma2-9b")) == 2
+    assert layer_period(get_config("jamba-1.5-large-398b")) == 8
+    assert layer_period(get_config("mamba2-2.7b")) == 1
+    assert layer_period(get_config("glm4-9b")) == 1
+
+
+def test_shape_applicability():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, reason = shape_applicable(cfg, shape)
+            if sname == "long_500k":
+                assert ok == (cfg.family in ("ssm", "hybrid")), arch
+            else:
+                assert ok, (arch, sname, reason)
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = [cfg.layer_kind(i) for i in range(8)]
+    assert kinds.count("attn") == 1 and kinds.count("ssm") == 7
+    moes = [cfg.is_moe_layer(i) for i in range(8)]
+    assert sum(moes) == 4  # every other layer
+
+
+def test_gemma2_local_global():
+    cfg = get_config("gemma2-9b")
+    assert cfg.is_local_layer(0) and not cfg.is_local_layer(1)

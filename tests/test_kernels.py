@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant.ops import dequantize_int8, quantize_int8
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_sequential_ref
+
+FA_CASES = [
+    # B, S, Hq, Hkv, d, win, cap, qb, kb, dtype
+    (2, 256, 4, 2, 64, None, None, 128, 128, jnp.float32),
+    (1, 512, 8, 8, 128, 128, 50.0, 128, 256, jnp.float32),
+    (2, 512, 4, 1, 64, None, 30.0, 256, 128, jnp.float32),
+    (1, 256, 2, 2, 32, 100, None, 64, 64, jnp.float32),
+    (1, 256, 4, 2, 64, None, None, 128, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_vs_ref(case):
+    b, s, hq, hkv, d, win, cap, qb, kb, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dt)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dt)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dt)
+    ref = attention_ref(q, k, v, causal=True, window=win, softcap=cap)
+    out = flash_attention(q, k, v, causal=True, window=win, softcap=cap,
+                          q_block=qb, kv_block=kb)
+    tol = 2e-5 if dt == jnp.float32 else 2e-2
+    assert float(jnp.abs(ref.astype(jnp.float32) - out.astype(jnp.float32)).max()) < tol
+
+
+DEC_CASES = [
+    (2, 512, 4, 2, 64, None, None, 300),
+    (1, 256, 8, 8, 128, 128, 50.0, 256),
+    (2, 512, 4, 1, 64, None, None, 1),
+    (1, 1024, 16, 2, 64, None, 30.0, 777),
+]
+
+
+@pytest.mark.parametrize("case", DEC_CASES)
+def test_decode_attention_vs_ref(case):
+    b, s, hq, hkv, d, win, cap, clen = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    ref = decode_attention_ref(q, kc, vc, jnp.asarray(clen), window=win, softcap=cap)
+    out = decode_attention_kernel(q, kc, vc, jnp.asarray(clen), window=win,
+                                  softcap=cap, kv_block=128)
+    assert float(jnp.abs(ref - out).max()) < 2e-5
+
+
+SSD_CASES = [(2, 64, 4, 8, 16, 16, 2), (1, 128, 6, 16, 8, 32, 3),
+             (2, 256, 8, 16, 32, 64, 8)]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_vs_sequential(case):
+    b, s, h, p, n, L, ht = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    yr, hr = ssd_sequential_ref(x, dt, A, Bm, C)
+    yk, hk = ssd_scan(x, dt, A, Bm, C, chunk=L, head_tile=ht)
+    assert float(jnp.abs(yr.astype(jnp.float32) - yk).max()) < 5e-3
+    assert float(jnp.abs(hr - hk).max()) < 5e-3
+
+
+@pytest.mark.parametrize("n,block", [(1000, 128), (4096, 256), (17, 16)])
+def test_quant_kernel_vs_ref(n, block):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 3
+    q, s = quantize_int8(x, block=block)
+    pad = (-n) % block
+    blocks = jnp.pad(x, (0, pad)).reshape(-1, block)
+    qr, sr = quantize_ref(blocks)
+    assert (q == qr).all()
+    # scales match to float32 ulp (reduction order differs across tiles)
+    assert float(jnp.abs(s - sr).max() / jnp.abs(sr).max()) < 1e-6
+    back = dequantize_int8(q, s, (n,))
+    ref = dequantize_ref(qr, sr).reshape(-1)[:n]
+    assert float(jnp.abs(back - ref).max()) < 1e-5
+    # roundtrip error bounded by half a quantization step per block
+    step = jnp.repeat(s[:, 0], block)[:n]
+    assert bool((jnp.abs(back - x) <= step * 0.5 + 1e-6).all())

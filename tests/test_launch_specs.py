@@ -1,0 +1,124 @@
+"""Sharding-spec construction for every (arch x shape x mesh) cell —
+no compilation, so the whole 40-cell matrix is validated in seconds.
+
+Guards the invariants the dry-run relies on:
+- every param leaf gets a PartitionSpec whose sharded dims divide;
+- batch specs shard the batch dim over (pod, data) when divisible;
+- decode caches pick the right strategy (head-sharded vs seq-sharded vs
+  context-parallel) per arch/shape;
+- abstract params match the real init's structure.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.inputs import batch_specs, decode_specs
+from repro.models.params import abstract_params
+from repro.models.model import init_cache_logical
+from repro.parallel.sharding import CONTEXT_PARALLEL_OVERRIDES, logical_to_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESHES = {
+    "16x16": FakeMesh({"data": 16, "model": 16}),
+    "2x16x16": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+IS_LG = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    shapes, logical = abstract_params(cfg)
+    sl = jax.tree.leaves(shapes)
+    ll = jax.tree.leaves(logical, is_leaf=IS_LG)
+    assert len(sl) == len(ll)
+    for spec_shape, lg in zip(sl, ll):
+        spec = logical_to_spec(lg, mesh, dim_sizes=spec_shape.shape)
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert spec_shape.shape[dim] % n == 0, (arch, lg, spec_shape.shape, spec)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_batch_and_cache_specs(arch, shape_name, mesh_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("cell skipped by design")
+    mesh = MESHES[mesh_name]
+
+    bs = batch_specs(cfg, shape)
+    assert bs["tokens"].dtype == jnp.int32
+    spec = logical_to_spec(("batch",) + (None,) * (len(bs["tokens"].shape) - 1),
+                           mesh, dim_sizes=bs["tokens"].shape)
+    total = shape.global_batch
+    if shape_name != "long_500k":
+        # batch must actually shard over (pod, data)
+        axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        n = 1
+        for a in axes:
+            if a:
+                n *= mesh.shape[a]
+        assert total % max(n, 1) == 0
+
+    if shape.kind == "decode":
+        tok, cache, pos = decode_specs(cfg, shape)
+        logical = init_cache_logical(cfg)
+        cl = jax.tree.leaves(cache)
+        ll = jax.tree.leaves(logical, is_leaf=IS_LG)
+        assert len(cl) == len(ll)
+        overrides = CONTEXT_PARALLEL_OVERRIDES if shape_name == "long_500k" else None
+        for spec_shape, lg in zip(cl, ll):
+            sp = logical_to_spec(lg, mesh, dim_sizes=spec_shape.shape,
+                                 overrides=overrides)
+            for dim, part in enumerate(sp):
+                if part is None:
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                n = 1
+                for a in axes:
+                    n *= mesh.shape[a]
+                assert spec_shape.shape[dim] % n == 0, (arch, lg, spec_shape.shape)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_abstract_params_match_real_init_structure(arch):
+    cfg = get_config(arch).reduced()
+    from repro.models.params import init_params
+    shapes, _ = abstract_params(cfg)
+    real, _ = init_params(cfg, jax.random.PRNGKey(0))
+    assert jax.tree_util.tree_structure(shapes) == jax.tree_util.tree_structure(real)
+    for a, b in zip(jax.tree.leaves(shapes), jax.tree.leaves(real)):
+        assert a.dtype == b.dtype
+
+
+def test_full_configs_memory_budget():
+    """fp32 master + moments (int8 for >100B) must fit 16 GiB/chip on the
+    single-pod mesh — the runnability gate the dry-run verifies."""
+    HBM = 16 * 2**30
+    for arch in list_archs():
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        big = n > 100e9
+        opt_bytes = n * (4 + (2 if big else 8))     # master + m,v
+        weights_bf16 = n * 2
+        per_chip = (opt_bytes + weights_bf16) / 256
+        assert per_chip < 0.8 * HBM, (arch, per_chip / 2**30)

@@ -1,0 +1,72 @@
+"""MoE dispatch: capacity, drops, hot-expert replication (Advice #1)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.moe import (moe_ffn, moe_ffn_dense_ref,
+                              replicate_hot_experts)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    k0 = jax.random.PRNGKey(2)
+    B, S, D, E, K, F = 2, 128, 32, 8, 2, 64
+    ks = jax.random.split(k0, 4)
+    params = {"router": jax.random.normal(ks[1], (D, E)) * 0.02,
+              "w_in": jax.random.normal(ks[2], (E, D, 2, F)) * 0.05,
+              "w_out": jax.random.normal(ks[3], (E, F, D)) * 0.05}
+    x_uniform = jax.random.normal(ks[0], (B, S, D)) * 0.5
+    x_skewed = (jax.random.normal(ks[0], (B, S, D)) * 0.1
+                + params["router"][:, 0][None, None, :] * 1.5)
+    return params, x_uniform, x_skewed, E, K
+
+
+def test_lossless_matches_dense(setup):
+    params, x, _, E, K = setup
+    y, m = moe_ffn(x, params, num_experts=E, top_k=K,
+                   activation=jax.nn.silu, capacity_factor=None)
+    yref = moe_ffn_dense_ref(x, params, num_experts=E, top_k=K,
+                             activation=jax.nn.silu)
+    assert float(jnp.abs(y.astype(jnp.float32) - yref.astype(jnp.float32)).max()) < 5e-2
+    assert float(m.dropped_frac) == 0.0
+
+
+def test_tight_capacity_drops(setup):
+    params, _, x_skew, E, K = setup
+    _, m = moe_ffn(x_skew, params, num_experts=E, top_k=K,
+                   activation=jax.nn.silu, capacity_factor=0.8)
+    assert 0.0 < float(m.dropped_frac) < 1.0
+
+
+def test_hot_expert_replication_reduces_drops(setup):
+    """Advice #1: replicating the hottest experts' queues tames skew."""
+    params, _, x_skew, E, K = setup
+    _, m0 = moe_ffn(x_skew, params, num_experts=E, top_k=K,
+                    activation=jax.nn.silu, capacity_factor=0.8)
+    _, m3 = moe_ffn(x_skew, params, num_experts=E, top_k=K,
+                    activation=jax.nn.silu, capacity_factor=0.8,
+                    hot_expert_replicas=3)
+    assert float(m3.dropped_frac) < float(m0.dropped_frac)
+
+
+def test_replication_is_output_lossless(setup):
+    """With lossless capacity, replicas must not change the math."""
+    params, _, x_skew, E, K = setup
+    y0, _ = moe_ffn(x_skew, params, num_experts=E, top_k=K,
+                    activation=jax.nn.silu, capacity_factor=None)
+    y3, _ = moe_ffn(x_skew, params, num_experts=E, top_k=K,
+                    activation=jax.nn.silu, capacity_factor=None,
+                    hot_expert_replicas=3)
+    assert float(jnp.abs(y0.astype(jnp.float32) - y3.astype(jnp.float32)).max()) < 5e-3
+
+
+def test_replicate_hot_experts_mapping():
+    idx = jnp.asarray([[0, 1], [0, 2], [0, 3], [0, 1]])
+    virt, parents = replicate_hot_experts(idx, None, num_experts=4,
+                                          replicas=2, num_hot=1)
+    # expert 0 is hottest; its replica is virtual expert 4 -> parent 0
+    assert parents.shape[0] == 5 and int(parents[4]) == 0
+    col0 = virt[:, 0]
+    assert set(int(v) for v in col0) == {0, 4}     # round-robin split
+    # non-hot assignments untouched
+    assert (virt[:, 1] == idx[:, 1]).all()

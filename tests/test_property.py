@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (ErrorFeedback, compress_with_feedback,
+                                    dequantize_int8_blockwise,
+                                    quantize_int8_blockwise)
+from repro.core.paths import collective_bytes_per_chip
+from repro.core.planner import Alternative, PathPlanner, PathUse
+from repro.core.paths import PathSpec
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 2000), st.integers(3, 9), st.floats(0.1, 100.0))
+def test_quant_roundtrip_error_bound(n, logblock, scale):
+    """|deq(q(x)) - x| <= half a quantization step, per block."""
+    block = 2 ** logblock
+    x = np.random.RandomState(n).randn(n).astype(np.float32) * scale
+    qt = quantize_int8_blockwise(jnp.asarray(x), block)
+    back = np.asarray(dequantize_int8_blockwise(qt, (n,)))
+    step = np.repeat(np.asarray(qt.scale), block)[:n]
+    assert (np.abs(back - x) <= step * 0.5 + 1e-6).all()
+
+
+@given(st.integers(2, 6), st.integers(1, 64))
+def test_error_feedback_is_unbiased_over_time(steps, n):
+    """Sum of compressed grads + final residual == sum of true grads."""
+    rng = np.random.RandomState(steps * 100 + n)
+    ef = ErrorFeedback.init((n,))
+    total_true = np.zeros(n, np.float32)
+    total_sent = np.zeros(n, np.float32)
+    for _ in range(steps):
+        g = jnp.asarray(rng.randn(n).astype(np.float32))
+        qt, ef = compress_with_feedback(g, ef, block=16)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(dequantize_int8_blockwise(qt, (n,)))
+    resid = np.asarray(ef.residual)
+    assert np.allclose(total_sent + resid, total_true, atol=1e-4)
+
+
+@given(st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all"]),
+       st.integers(2, 64), st.integers(1, 10**9))
+def test_collective_traffic_monotone_in_group(op, n, nbytes):
+    a = collective_bytes_per_chip(op, nbytes, n)
+    b = collective_bytes_per_chip(op, nbytes, n + 1)
+    assert 0 <= a <= b or op == "all-reduce" and a <= b
+    assert collective_bytes_per_chip(op, nbytes, 1) == 0.0
+
+
+def _mk_paths(bw1, bw2):
+    return {
+        "p1": PathSpec("p1", "ici", None, 2, bw1, 0, True, "g1"),
+        "p2": PathSpec("p2", "ici", None, 2, bw2, 0, True, "g2"),
+    }
+
+
+@given(st.floats(1.0, 1e3), st.floats(1.0, 1e3),
+       st.floats(0.1, 4.0), st.floats(0.1, 4.0))
+def test_greedy_combine_bounded_by_solo_sum(bw1, bw2, u1, u2):
+    """Combined rate never exceeds the sum of solo rates, and never
+    falls below the best solo rate (greedy picks it first)."""
+    paths = _mk_paths(bw1, bw2)
+    a = Alternative("a", uses=[PathUse("p1", out_bytes=u1)])
+    b = Alternative("b", uses=[PathUse("p2", out_bytes=u2)])
+    pl = PathPlanner(paths)
+    ranked = pl.rank([a, b])
+    _, total = pl.combine_greedy(ranked)
+    solos = [a.solo_rate(paths), b.solo_rate(paths)]
+    assert total <= sum(solos) + 1e-6
+    assert total >= max(solos) - 1e-6
+
+
+@given(st.floats(1.0, 1e3), st.floats(0.1, 4.0), st.integers(1, 4))
+def test_shared_path_conserves_budget(bw, use, nalts):
+    """N alternatives on one shared path: allocations sum to <= budget."""
+    paths = _mk_paths(bw, bw)
+    alts = [Alternative(f"a{i}", uses=[PathUse("p1", out_bytes=use)])
+            for i in range(nalts)]
+    pl = PathPlanner(paths)
+    allocs, total = pl.combine_greedy(alts)
+    spent = sum(al.rate * use for al in allocs)
+    assert spent <= bw * (1 + 1e-9)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 10_000))
+def test_pipeline_statelessness(s1, s2):
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import TokenPipeline
+    cfg = get_config("internlm2-1.8b").reduced()
+    pipe = TokenPipeline(cfg, ShapeConfig("t", 16, 2, "train"), seed=0)
+    a, b = pipe.batch_at(s1), pipe.batch_at(s1)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    if s1 != s2:
+        c = pipe.batch_at(s2)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+@given(st.integers(1, 512))
+def test_elastic_mesh_never_exceeds_devices(n):
+    from repro.ft.elastic import best_mesh_for
+    shape, names = best_mesh_for(n, model=16)
+    assert int(np.prod(shape)) <= n
+    assert len(shape) == len(names)

@@ -1,0 +1,86 @@
+"""Serving engine + disaggregated KV store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.params import init_params
+from repro.serve.disagg import DisaggKV, KVStoreParams
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_serves_all_requests(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=3, max_len=64, impl="ref")
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=5) for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.out_tokens) == 5 for r in reqs)
+
+
+def test_engine_greedy_matches_offline(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, impl="ref")
+    rng = np.random.default_rng(1)
+    r = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=4)
+    eng.submit(r)
+    eng.run()
+    full = jnp.asarray(np.concatenate([r.prompt, np.asarray(r.out_tokens[:-1], np.int32)]))[None]
+    res = M.forward(cfg, params, full, impl="ref", remat="none")
+    nxt = int(jnp.argmax(M.logits_for(cfg, params, res.hidden[:, -1:])[0, 0]))
+    assert nxt == r.out_tokens[-1]
+
+
+def test_engine_mixed_lengths(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, impl="ref")
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i, (plen, new) in enumerate([(4, 3), (12, 6), (8, 2), (16, 4), (6, 5)]):
+        r = Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                    max_new_tokens=new)
+        reqs.append(r)
+        eng.submit(r)
+    eng.run()
+    for r, (_, new) in zip(reqs, [(4, 3), (12, 6), (8, 2), (16, 4), (6, 5)]):
+        assert r.done and len(r.out_tokens) == new
+
+
+def test_disagg_data_plane_correct():
+    kv = DisaggKV(KVStoreParams(n_keys=5000, soc_cache_keys=500))
+    rng = np.random.default_rng(0)
+    for alt in ["A1", "A2", "A3", "A4", "A5"]:
+        for k in rng.integers(0, 5000, 50):
+            v, lat = kv.get(int(k), alt)
+            assert (v == kv.values[int(k)]).all()
+            assert 0 < lat < 1e-4
+
+
+def test_disagg_latency_ordering():
+    kv = DisaggKV(KVStoreParams(n_keys=5000, soc_cache_keys=5000))  # all cached
+    _, l5 = kv.get(1, "A5")
+    _, l4 = kv.get(1, "A4")
+    _, l1 = kv.get(1, "A1")
+    _, l2 = kv.get(1, "A2")
+    assert l5 < l4 < l1 < l2   # Fig 17(a)
+
+
+def test_disagg_combined_beats_components():
+    kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
+    paths, alts = kv.paths(), kv.alternatives()
+    total, allocs = kv.combined_a4_a5()
+    assert total > alts["A4"].solo_rate(paths)
+    assert sum(a.rate for a in allocs) == pytest.approx(total)

@@ -1,0 +1,64 @@
+"""Logical-axis resolution rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import logical_to_spec, mesh_axis_size
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real device: use a 1x1 mesh; rule resolution is
+    # independent of device count except for divisibility checks.
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class FakeMesh:
+    """Duck-typed mesh with arbitrary axis sizes for rule tests."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_basic_resolution():
+    m = FakeMesh({"data": 16, "model": 16})
+    assert logical_to_spec(("fsdp", "heads", None), m) == P("data", "model", None)
+    assert logical_to_spec(("vocab", "fsdp"), m) == P("model", "data")
+
+
+def test_divisibility_degrades_to_replication():
+    m = FakeMesh({"data": 16, "model": 16})
+    # kv_heads = 2 is not divisible by model=16 -> replicate that dim
+    spec = logical_to_spec(("fsdp", "kv_heads", None), m, dim_sizes=(4096, 2, 128))
+    assert spec == P("data", None, None)
+    # kv_heads = 16 shards fine
+    spec = logical_to_spec(("fsdp", "kv_heads", None), m, dim_sizes=(4096, 16, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_missing_axis_degrades():
+    m = FakeMesh({"data": 8})           # no model axis (e.g. 1-pod test mesh)
+    assert logical_to_spec(("fsdp", "heads", None), m) == P("data", None, None)
+
+
+def test_multi_axis_batch():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(("batch", None), m, dim_sizes=(256, 128))
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicate
+    spec = logical_to_spec(("batch", None), m, dim_sizes=(1, 128))
+    assert spec == P(None, None)
+
+
+def test_overrides():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(("kv_seq",), m, dim_sizes=(524288,),
+                           overrides={"kv_seq": "data"})
+    assert spec == P("data")
+
+
+def test_mesh_axis_size():
+    m = FakeMesh({"pod": 2, "data": 16})
+    assert mesh_axis_size(m, ("pod", "data")) == 32
+    assert mesh_axis_size(m, "absent") == 1
+    assert mesh_axis_size(m, None) == 1

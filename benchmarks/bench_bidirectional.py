@@ -10,8 +10,7 @@ import os
 import subprocess
 import sys
 
-from repro.core.planner import Alternative, PathPlanner, PathUse
-from repro.core.paths import PathSpec
+from repro.core.fabric import Alternative, Fabric, Path, Use
 
 from benchmarks.common import row
 
@@ -19,17 +18,16 @@ N = 200e9 / 8
 
 
 def model_part() -> None:
-    paths = {"net": PathSpec("net", "ici", None, 2, N, 1e-6, True, "net")}
-    pl = PathPlanner(paths)
-    read = Alternative("read", uses=[PathUse("net", out_bytes=1)])
-    write = Alternative("write", uses=[PathUse("net", in_bytes=1)])
-    read2 = Alternative("read2", uses=[PathUse("net", out_bytes=1)])
-    relay = Alternative("relay", uses=[PathUse("net", out_bytes=1, in_bytes=1)])
+    router = Fabric.of(Path("net", N, latency=1e-6, kind="ici")).router()
+    read = Alternative("read", uses=[Use("net", out=1)])
+    write = Alternative("write", uses=[Use("net", in_=1)])
+    read2 = Alternative("read2", uses=[Use("net", out=1)])
+    relay = Alternative("relay", uses=[Use("net", out=1, in_=1)])
     for name, combo in [("read_write", [read, write]),
                         ("read_read", [read, read2]),
                         ("relay_alone", [relay]),
                         ("relay_plus_read", [relay, read])]:
-        _, total = pl.combine_greedy(combo)
+        _, total = router.allocate(combo)
         row(f"fig5/{name}", 0.0, f"GBps={total * 8 / 1e9:.0f}Gbps")
 
 
@@ -61,7 +59,7 @@ with jax.set_mesh(mesh):
         dt = (time.perf_counter() - t0) / 10
         hlo = fn.lower(xs).compile().as_text()
         nperm = hlo.count("collective-permute(")
-        print(f"fig5b/ring_ag_bidir={b},{dt*1e6:.1f},permutes={nperm}")
+        print(f"fig5b/ring_ag_bidir={bidir},{dt*1e6:.1f},permutes={nperm}")
 """
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

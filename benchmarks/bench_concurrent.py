@@ -1,11 +1,10 @@
 """Paper §4.1 / Figure 12: concurrent paths — interference + gains.
 
-Budget-model reproduction of: ①+② concurrent gains (4-13%), ③'s hidden
+Budget-ledger reproduction of: ①+② concurrent gains (4-13%), ③'s hidden
 bottleneck (P-N rule), and the DMA variant's reduced interference."""
 from __future__ import annotations
 
-from repro.core.planner import Alternative, PathPlanner, PathUse
-from repro.core.paths import PathSpec
+from repro.core.fabric import Alternative, Fabric, Path, Use
 
 from benchmarks.common import row
 
@@ -13,30 +12,29 @@ N = 200e9 / 8
 P_ = 256e9 / 8
 
 
-def paths():
-    return {
-        "net": PathSpec("net", "ici", None, 2, N, 1e-6, True, "net"),
-        "pcie": PathSpec("pcie", "pcie", None, 2, P_, 3e-7, True, "pcie"),
-        "dma": PathSpec("dma", "pcie", None, 2, 0.7 * P_, 3e-7, True, "pcie"),
-    }
+def fabric() -> Fabric:
+    return Fabric.of(
+        Path("net", N, latency=1e-6, kind="ici", shared_group="net"),
+        Path("pcie", P_, latency=3e-7, kind="pcie", shared_group="pcie"),
+        Path("dma", 0.7 * P_, latency=3e-7, kind="pcie", shared_group="pcie"),
+    )
 
 
 def main() -> None:
-    print("# fig12/4.1: concurrent path combinations (budget model)")
-    pl = PathPlanner(paths())
+    print("# fig12/4.1: concurrent path combinations (budget ledger)")
+    router = fabric().router()
     # ① + ③(H2S): intra-machine relay eats both pcie directions
-    p1 = Alternative("p1_host", uses=[PathUse("net", out_bytes=1),
-                                      PathUse("pcie", out_bytes=1)])
-    p3 = Alternative("p3_relay", uses=[PathUse("pcie", out_bytes=1, in_bytes=1)])
-    p3dma = Alternative("p3_dma", uses=[PathUse("dma", out_bytes=1)])
+    p1 = Alternative("p1_host", uses=[Use("net", out=1), Use("pcie", out=1)])
+    p3 = Alternative("p3_relay", uses=[Use("pcie", out=1, in_=1)])
+    p3dma = Alternative("p3_dma", uses=[Use("dma", out=1)])
     for name, combo in [("p1_alone", [p1]), ("p1_plus_p3", [p1, p3]),
                         ("p3_alone", [p3]), ("p1_plus_dma", [p1, p3dma])]:
-        allocs, total = pl.combine_greedy(combo)
+        allocs, total = router.allocate(combo)
         parts = " ".join(f"{a.alternative}={a.rate*8/1e9:.0f}Gbps({a.bottleneck})"
                          for a in allocs)
         row(f"fig12/{name}", 0.0, f"total={total*8/1e9:.0f}Gbps {parts}")
     # the B_slow <= P - N slack rule
-    slack = pl.slack(p1, "pcie")
+    slack = router.slack(p1, "pcie")
     row("fig12/slack_P_minus_N", 0.0,
         f"slack={slack*8/1e9:.0f}Gbps expected={(P_-N)*8/1e9:.0f}Gbps")
 

@@ -22,7 +22,7 @@ from benchmarks.common import row
 
 def kv_part() -> None:
     kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
-    paths, alts = kv.paths(), kv.alternatives()
+    fabric, alts = kv.fabric(), kv.alternatives()
     keys = kv.zipf_keys(3000)
     for alt in ("A1", "A2", "A3", "A4", "A5"):
         lats = []
@@ -30,12 +30,12 @@ def kv_part() -> None:
         for k in keys[:1000]:
             v, lat = kv.get(int(k), alt)
             lats.append(lat)
-        thr = alts[alt].solo_rate(paths)
+        thr = alts[alt].solo_rate(fabric)
         row(f"fig17/{alt}", float(np.mean(lats)) * 1e6,
             f"model_thr={thr/1e6:.1f}M data_plane_wall={time.monotonic()-t0:.2f}s")
     total, allocs = kv.combined_a4_a5()
-    a1 = alts["A1"].solo_rate(paths)
-    a4 = alts["A4"].solo_rate(paths)
+    a1 = alts["A1"].solo_rate(fabric)
+    a4 = alts["A4"].solo_rate(fabric)
     rnic = kv.c.rnic_read_rate / 2
     row("fig18/A4_plus_A5", 0.0,
         f"{total/1e6:.1f}M hit_mass={kv.cache_hit_mass():.2f} "
@@ -47,18 +47,25 @@ def kv_part() -> None:
 def engine_part() -> None:
     cfg = get_config("internlm2-1.8b").reduced()
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=4, max_len=96, impl="ref")
+    kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
+    eng = ServeEngine(cfg, params, slots=4, max_len=96, impl="ref",
+                      fabric=kv.fabric(), cache_hit_mass=kv.cache_hit_mass(),
+                      placement_costs=kv.c)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
                     max_new_tokens=16) for i in range(8)]
     for r in reqs:
         eng.submit(r)
     t0 = time.monotonic()
-    eng.run()
+    done = eng.run()
     dt = time.monotonic() - t0
     toks = sum(len(r.out_tokens) for r in reqs)
+    pl = eng.placement
     row("fig18/engine_decode", dt / max(toks, 1) * 1e6,
-        f"tok_s={toks/dt:.1f} requests={len(reqs)} decode_steps={eng.stats['decode_steps']}")
+        f"tok_s={toks/dt:.1f} requests={len(done)} "
+        f"decode_steps={eng.stats['decode_steps']} "
+        f"placement={pl.location} rate={pl.rate/1e6:.1f}M "
+        f"(+{(pl.rate/pl.baseline_rate-1)*100:.0f}% vs host)")
 
 
 def main() -> None:

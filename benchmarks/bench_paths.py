@@ -1,5 +1,5 @@
 """Paper Figure 3: per-path latency + peak throughput across payload
-sizes, from the calibrated TPU path model (core/paths.py).
+sizes, from the calibrated TPU Fabric (core/paths.py -> core/fabric.py).
 
 Each mesh path gets a latency/bandwidth curve vs payload; the derived
 column reports the paper-analogue finding (path-2-style fast path vs
@@ -14,7 +14,7 @@ PAYLOADS = [256, 4096, 65536, 1 << 20, 16 << 20, 256 << 20]
 
 
 def main() -> None:
-    paths = enumerate_paths({"pod": 2, "data": 16, "model": 16})
+    paths = enumerate_paths({"pod": 2, "data": 16, "model": 16})  # a Fabric
     print("# fig3: path,payload_bytes -> us (model), bandwidth GB/s")
     for name, p in sorted(paths.items()):
         for payload in PAYLOADS:

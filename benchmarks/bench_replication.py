@@ -15,7 +15,8 @@ import jax
 from repro.ckpt.checkpoint import CheckpointManager, save_checkpoint
 from repro.ckpt.replication import plan_replication
 from repro.configs import get_config
-from repro.core.planner import PathPlanner, linefs_alternatives, linefs_paths
+from repro.core.fabric import (MultipathRouter, linefs_fabric,
+                               linefs_replication_alternatives)
 from repro.models.params import init_params
 
 from benchmarks.common import row
@@ -47,13 +48,13 @@ def main() -> None:
             f"replicas=2 ratio={mgr.stats[-1]['ratio']:.2f}")
 
     # §5.1 analysis at the measured ratio (paper's Fig 14/15 math)
-    paths = linefs_paths(N, P_)
-    alts = linefs_alternatives(N, P_, ratio)
-    pl = PathPlanner(paths)
+    fabric = linefs_fabric(N, P_)
+    alts = linefs_replication_alternatives(N, P_, ratio)
+    router = MultipathRouter(fabric)
     for a in alts:
         row(f"fig15/{a.name}_solo", 0.0,
-            f"{a.solo_rate(paths)*8/1e9:.0f}Gbps ratio={ratio:.2f}")
-    allocs, total = pl.combine_greedy([alts[1], alts[2]])
+            f"{a.solo_rate(fabric)*8/1e9:.0f}Gbps ratio={ratio:.2f}")
+    allocs, total = router.allocate([alts[1], alts[2]])
     row("fig15/A2_plus_A3", 0.0,
         f"{total*8/1e9:.0f}Gbps "
         + " ".join(f"{al.alternative}={al.rate*8/1e9:.0f}Gbps" for al in allocs))
@@ -62,7 +63,7 @@ def main() -> None:
         f"ranked={plan.ranked} compress={plan.use_compression} | {plan.notes}")
 
     # paper headline: multi-path vs single-path improvement
-    single = max(a.solo_rate(paths) for a in alts)
+    single = max(a.solo_rate(fabric) for a in alts)
     row("fig13/multipath_gain", 0.0,
         f"+{(total/single-1)*100:.0f}% vs best single path (paper: +7-30%)")
 

@@ -1,11 +1,17 @@
 """Shared benchmark utilities. Every bench prints ``name,us_per_call,derived``
-CSV rows (plus richer derived columns per figure)."""
+CSV rows (plus richer derived columns per figure); rows are also
+collected in-process so drivers can emit machine-readable output
+(benchmarks/run.py --json)."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+# every row() call lands here; run.py tags rows with their section and
+# drains the list between sections.
+RESULTS: List[Dict[str, object]] = []
 
 
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -26,4 +32,5 @@ def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 def row(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.2f},{derived}"
     print(line)
+    RESULTS.append({"name": name, "us": us, "derived": derived})
     return line

@@ -41,10 +41,11 @@ def table(rows):
               f"| {coll} |")
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="")
-    args = ap.parse_args()
+    # default to no args: the benchmark driver (run.py) owns sys.argv
+    args = ap.parse_args([] if argv is None else argv)
     rows = load(args.tag)
     if not rows:
         print(f"# no dry-run artifacts under {RUNS} (run repro.launch.dryrun)")

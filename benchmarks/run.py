@@ -1,12 +1,18 @@
 """Benchmark driver: one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows; ``--json out.json`` also
+emits the rows as machine-readable records so the perf trajectory can be
+tracked across PRs (BENCH_*.json)."""
 from __future__ import annotations
 
+import argparse
+import json
+import time
 import traceback
 
 from benchmarks import (bench_bidirectional, bench_bucketing, bench_concurrent,
                         bench_granularity, bench_kernels, bench_kvserve,
                         bench_paths, bench_replication, bench_skew, roofline)
+from benchmarks import common
 
 SECTIONS = [
     ("paths (Fig 3)", bench_paths.main),
@@ -22,15 +28,38 @@ SECTIONS = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write rows as a JSON list of records")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on section names")
+    args = ap.parse_args(argv)
+    if args.json:                      # fail fast, not after minutes of work
+        open(args.json, "w").close()
+
     failures = []
+    records = []
     for name, fn in SECTIONS:
+        if args.only and args.only not in name:
+            continue
         print(f"\n==== {name} ====")
+        common.RESULTS.clear()
+        t0 = time.monotonic()
         try:
             fn()
         except Exception:  # noqa: BLE001 — report all sections
             failures.append(name)
             traceback.print_exc()
+        for r in common.RESULTS:
+            records.append({"section": name, **r})
+        records.append({"section": name, "name": "_section_wall_s",
+                        "us": (time.monotonic() - t0) * 1e6, "derived": ""})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": records, "failures": failures}, f, indent=1)
+        print(f"\nwrote {len(records)} rows to {args.json}")
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
     print("\nall benchmark sections completed")

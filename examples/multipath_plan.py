@@ -42,10 +42,10 @@ def replication():
 def kv_store():
     print("== functionality 2: disaggregated KV get (DrTM-KV) ==")
     kv = DisaggKV(KVStoreParams())
-    paths, alts = kv.paths(), kv.alternatives()
-    ranked = sorted(alts.values(), key=lambda a: -a.solo_rate(paths))
-    for a in ranked:
-        print(f"  {a.name}: {a.solo_rate(paths)/1e6:5.1f} M gets/s, "
+    fabric, alts = kv.fabric(), kv.alternatives()
+    router = fabric.router()
+    for a in router.rank(list(alts.values())):
+        print(f"  {a.name}: {a.solo_rate(fabric)/1e6:5.1f} M gets/s, "
               f"{a.criteria['latency_us']:.1f} us")
     total, allocs = kv.combined_a4_a5()
     print(f" combined A4+A5: {total/1e6:.1f} M gets/s "

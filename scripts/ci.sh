@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies.
+#   scripts/ci.sh            # run tests
+#   scripts/ci.sh --bench    # also run the benchmark driver with JSON output
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    PYTHONPATH=src:. python benchmarks/run.py --json "BENCH_$(date +%Y%m%d).json"
+fi

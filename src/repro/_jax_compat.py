@@ -1,0 +1,75 @@
+"""Compatibility layer for older jax releases (this container ships
+jax 0.4.x; the code targets the current API).
+
+Installs top-level aliases on `jax` when missing:
+  * ``jax.shard_map``       — wraps ``jax.experimental.shard_map`` and
+    translates ``check_vma`` -> ``check_rep`` and ``axis_names`` ->
+    ``auto`` (the complement set);
+  * ``jax.set_mesh``        — returns the Mesh itself, which is already
+    a context manager on old jax (``with mesh:``);
+  * ``jax.sharding.AxisType`` and the ``axis_types`` kwarg of
+    ``jax.make_mesh`` — accepted and ignored (old meshes have no axis
+    types; everything behaves like Auto).
+
+Idempotent; imported from ``repro/__init__.py`` so any entry point gets
+it before touching model code.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _compat_shard_map():
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, axis_names=None, **kw):
+        kwargs = dict(kw)
+        kwargs.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        rep = check_rep if check_rep is not None else check_vma
+        if rep is not None:
+            kwargs["check_rep"] = bool(rep)
+        if axis_names is not None and mesh is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _sm(f, **kwargs)
+
+    return shard_map
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map()
+
+    if not hasattr(jax.lax, "axis_size"):
+        # psum of the literal 1 constant-folds to the named-axis size
+        jax.lax.axis_size = lambda axis_name: jax.lax.psum(1, axis_name)
+
+    if not hasattr(jax, "set_mesh"):
+        # old Mesh objects are context managers; `with jax.set_mesh(m):`
+        # degrades to `with m:` (no ambient abstract mesh — callers that
+        # probe it, e.g. parallel/sharding.get_abstract_mesh, handle None)
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _mk = jax.make_mesh
+
+        @functools.wraps(_mk)
+        def make_mesh(*args, axis_types=None, **kw):
+            return _mk(*args, **kw)
+
+        jax.make_mesh = make_mesh
+
+
+install()

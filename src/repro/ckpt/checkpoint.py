@@ -37,9 +37,32 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+import zlib
+
+try:  # optional: fall back to zlib when the wheel is absent
+    import zstandard as zstd
+except ImportError:
+    zstd = None
 
 PyTree = Any
+
+# codec name -> (extension, compress fn, decompress fn); recorded in the
+# manifest so a checkpoint written with one codec restores anywhere.
+_CODECS = {
+    "zstd": (".zst",
+             lambda b: zstd.ZstdCompressor(level=3).compress(b),
+             lambda b: zstd.ZstdDecompressor().decompress(b)),
+    "zlib": (".zz",
+             lambda b: zlib.compress(b, 6),
+             lambda b: zlib.decompress(b)),
+    "none": ("", lambda b: b, lambda b: b),
+}
+
+
+def default_codec(compress: bool) -> str:
+    if not compress:
+        return "none"
+    return "zstd" if zstd is not None else "zlib"
 
 
 def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
@@ -65,14 +88,17 @@ def save_checkpoint(path: str, tree: PyTree, *, step: int,
     buf = io.BytesIO()
     np.savez(buf, **{name: arr for name, arr in leaves})
     raw = buf.getvalue()
-    payload = zstd.ZstdCompressor(level=3).compress(raw) if compress else raw
-    fname = "data.npz.zst" if compress else "data.npz"
+    codec = default_codec(compress)
+    ext, comp, _ = _CODECS[codec]
+    payload = comp(raw)
+    fname = "data.npz" + ext
     with open(os.path.join(tmp, fname), "wb") as f:
         f.write(payload)
 
     manifest = {
         "step": step,
         "compress": compress,
+        "codec": codec,
         "raw_bytes": len(raw),
         "stored_bytes": len(payload),
         "sha256": hashlib.sha256(payload).hexdigest(),
@@ -97,12 +123,16 @@ def load_checkpoint(path: str, like: PyTree) -> Tuple[PyTree, int]:
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    fname = "data.npz.zst" if manifest["compress"] else "data.npz"
-    with open(os.path.join(path, fname), "rb") as f:
+    # checkpoints from before the codec header used zstd whenever compressed
+    codec = manifest.get("codec", "zstd" if manifest["compress"] else "none")
+    if codec == "zstd" and zstd is None:
+        raise IOError(f"checkpoint {path} needs the zstandard module")
+    ext, _, decomp = _CODECS[codec]
+    with open(os.path.join(path, "data.npz" + ext), "rb") as f:
         payload = f.read()
     if hashlib.sha256(payload).hexdigest() != manifest["sha256"]:
         raise IOError(f"checkpoint {path} corrupt (hash mismatch)")
-    raw = zstd.ZstdDecompressor().decompress(payload) if manifest["compress"] else payload
+    raw = decomp(payload)
     npz = np.load(io.BytesIO(raw))
     flat_names = [n for n, _ in _flatten_with_names(like)]
     assert flat_names == manifest["names"], "tree structure changed"

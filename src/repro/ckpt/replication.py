@@ -1,20 +1,21 @@
 """Replication planning — the LineFS §5.1 decision, parameterized by the
-checkpoint's measured compression ratio and the live path budgets.
+checkpoint's measured compression ratio and the live fabric budgets.
 
-`plan_replication` ranks A1/A2/A3 with the PathPlanner and returns the
-greedy combination plus predicted bandwidths; CheckpointManager and the
-bench (benchmarks/bench_replication.py) consume it. The same analysis
-drives RunConfig.ckpt_compress.
+`plan_replication` builds the LineFS fabric, ranks A1/A2/A3 with the
+MultipathRouter and returns the greedy combination plus predicted
+bandwidths; CheckpointManager and the bench
+(benchmarks/bench_replication.py) consume it. The same analysis drives
+RunConfig.ckpt_compress.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core import hw
-from repro.core.planner import (Allocation, Alternative, PathPlanner,
-                                linefs_alternatives, linefs_paths)
+from repro.core.fabric import (Allocation, Fabric, MultipathRouter,
+                               linefs_fabric, linefs_replication_alternatives)
 
 
 @dataclass
@@ -29,30 +30,34 @@ class ReplicationPlan:
 def plan_replication(*, ratio: float,
                      net_bw: float = hw.DCN_BW_PER_CHIP,
                      staging_bw: float = hw.PCIE_BW,
-                     soc_rate: Optional[float] = None) -> ReplicationPlan:
+                     soc_rate: Optional[float] = None,
+                     fabric: Optional[Fabric] = None) -> ReplicationPlan:
     """ratio = compressed/raw (from the last checkpoint's stats).
 
     net_bw: replication network budget per host (DCN).
     staging_bw: host staging link (PCIe), the paper's P.
     soc_rate: compression throughput cap (None = unbounded).
+    fabric: pre-built fabric to plan on (defaults to the LineFS fabric
+    at the given bandwidths).
     """
-    paths = linefs_paths(net_bw, staging_bw)
-    alts = linefs_alternatives(net_bw, staging_bw, ratio,
-                               soc_rate=soc_rate if soc_rate else math.inf)
-    pl = PathPlanner(paths)
+    fabric = fabric if fabric is not None else linefs_fabric(net_bw, staging_bw)
+    alts = linefs_replication_alternatives(
+        net_bw, staging_bw, ratio,
+        soc_rate=soc_rate if soc_rate else math.inf)
+    router = MultipathRouter(fabric)
     # paper §5.1: A2 dominates A1 (same traffic, no double-crossing);
     # rank A2 vs A3 by solo rate, then combine greedily.
     a1, a2, a3 = alts
-    ranked = pl.rank([a2, a3])
-    allocs, total = pl.combine_greedy(ranked)
+    ranked = router.rank([a2, a3])
+    allocs, total = router.allocate(ranked)
     use_comp = ranked[0].name == "A2"
     return ReplicationPlan(
         ranked=[a.name for a in ranked],
         allocations=allocs,
         total_rate=total,
         use_compression=use_comp,
-        notes=(f"ratio={ratio:.2f}: A1={a1.solo_rate(paths)/1e9:.1f} "
-               f"A2={a2.solo_rate(paths)/1e9:.1f} "
-               f"A3={a3.solo_rate(paths)/1e9:.1f} GB/s; "
+        notes=(f"ratio={ratio:.2f}: A1={a1.solo_rate(fabric)/1e9:.1f} "
+               f"A2={a2.solo_rate(fabric)/1e9:.1f} "
+               f"A3={a3.solo_rate(fabric)/1e9:.1f} GB/s; "
                f"combined={total/1e9:.1f} GB/s"),
     )

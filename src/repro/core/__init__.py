@@ -1,14 +1,23 @@
-"""core: the paper's contribution — multi-path characterization,
-planning and collectives for TPU meshes."""
+"""core: the paper's contribution — a unified multi-path fabric,
+routing/planning and collectives for TPU meshes."""
 from repro.core import hw
+from repro.core.fabric import (Allocation, Alternative, BudgetLedger,
+                               Fabric, MultipathRouter, Path, Use,
+                               BYTES_PER_S, OPS_PER_S)
 from repro.core.paths import PathSpec, enumerate_paths, collective_bytes_per_chip
-from repro.core.planner import Alternative, PathPlanner, PathUse
+from repro.core.planner import PathPlanner, PathUse
 from repro.core.charz import parse_collectives, summarize_traffic
 from repro.core.roofline import RooflineReport, build_report, model_flops_for
 
 __all__ = [
-    "hw", "PathSpec", "enumerate_paths", "collective_bytes_per_chip",
-    "Alternative", "PathPlanner", "PathUse",
+    "hw",
+    # fabric API (canonical)
+    "Fabric", "Path", "Use", "Alternative", "Allocation",
+    "BudgetLedger", "MultipathRouter", "BYTES_PER_S", "OPS_PER_S",
+    # TPU fabric + traffic model
+    "PathSpec", "enumerate_paths", "collective_bytes_per_chip",
+    # deprecated shims
+    "PathPlanner", "PathUse",
     "parse_collectives", "summarize_traffic",
     "RooflineReport", "build_report", "model_flops_for",
 ]

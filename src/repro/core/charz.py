@@ -172,8 +172,18 @@ class TrafficSummary:
 
 
 def summarize_traffic(hlo_text: str,
-                      mesh_axes: Sequence[Tuple[str, int]]) -> TrafficSummary:
-    """Attribute every collective's traffic to its (slowest) path."""
+                      mesh_axes: Sequence[Tuple[str, int]],
+                      fabric=None) -> TrafficSummary:
+    """Attribute every collective's traffic to its (slowest) path.
+
+    Attribution targets are the path names of `fabric` (a
+    ``core.fabric.Fabric``); when omitted, the TPU fabric for
+    `mesh_axes` is enumerated (so the names are "dcn:pod"/"ici:<axis>").
+    """
+    if fabric is None:
+        from repro.core.paths import enumerate_paths
+        fabric = enumerate_paths(dict(mesh_axes))
+    by_axis = {p.axis: p.name for p in fabric.values() if p.axis}
     ops = parse_collectives(hlo_text, mesh_axes)
     per_path: Dict[str, float] = defaultdict(float)
     per_op: Dict[str, float] = defaultdict(float)
@@ -181,9 +191,10 @@ def summarize_traffic(hlo_text: str,
     for op in ops:
         # slowest constituent: dcn (pod) dominates ici
         if "pod" in op.axes:
-            path = "dcn:pod"
+            path = by_axis.get("pod", "dcn:pod")
         elif op.axes:
-            path = f"ici:{op.axes[-1]}"   # innermost listed axis
+            axis = op.axes[-1]            # innermost listed axis
+            path = by_axis.get(axis, f"ici:{axis}")
         else:
             path = "ici:?"
         per_path[path] += op.traffic_per_chip

@@ -1,0 +1,532 @@
+"""The unified communication-fabric API (paper §2.3–§4.2).
+
+One abstraction for every rendition of the paper's path model — the TPU
+mesh (①/②/③/③* as ICI/DCN/PCIe, core/paths.py), the LineFS §5.1
+replication fabric, and the DrTM-KV §5.2 RDMA fabric — instead of three
+incompatible ad-hoc copies.
+
+Concepts
+--------
+``Path``       one directed-capacity resource: bandwidth in *typed*
+               units (``bytes/s`` or ``ops/s``), per direction; a
+               bidirectional path multiplexes opposite flows (paper
+               Fig 5: READ+WRITE ≈ 2x one-way).
+``Fabric``     the set of paths plus the fabric-wide §4.1 concurrency
+               discount; behaves as a ``Mapping[str, Path]``.
+``Use``        traffic one unit of work places on one path (amounts in
+               the path's units, per direction).
+``Alternative``one way to implement a functionality: a bundle of Uses,
+               an optional endpoint compute cap (the "wimpy SoC"
+               premise), and ranking criteria.
+``BudgetLedger``per-direction budget accounting with reserve / release /
+               checkpoint-restore semantics. The §4.1 concurrency
+               discount — shared resources lose 7–15% when more than
+               one flow is concurrently active on them (or on a path in
+               the same ``shared_group``) — is applied *here, once*,
+               never at call sites.
+``MultipathRouter``the §4.2 guideline, executable: rank alternatives,
+               greedily combine them against a ledger until a shared
+               resource saturates, blend a fixed mix (e.g. the DrTM-KV
+               A4+A5 hit/miss split), and the B_slow <= P − N slack
+               rule.
+
+The per-direction budget model reproduces the paper's findings natively:
+opposite-direction flows draw from different direction budgets (Fig 5),
+and a path that crosses one link twice (paper path-③) consumes both
+budgets at once — the "hidden bottleneck".
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from collections.abc import Mapping
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
+
+# typed path units
+BYTES_PER_S = "bytes/s"
+OPS_PER_S = "ops/s"
+
+OUT, IN = "out", "in"
+_DIRS = (OUT, IN)
+
+
+class FabricError(ValueError):
+    """Unknown path, unit mismatch, or malformed alternative."""
+
+
+class InsufficientBudget(RuntimeError):
+    """A strict reserve() asked for more than the remaining budget."""
+
+
+# ----------------------------------------------------------------------
+# paths and fabrics
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Path:
+    """One communication path. ``capacity`` is per direction, in
+    ``units``; ``bidirectional`` means the opposite direction has its
+    own equal budget (multiplexing), otherwise the IN budget is 0."""
+    name: str
+    capacity: float
+    units: str = BYTES_PER_S
+    latency: float = 0.0               # seconds, one hop
+    bidirectional: bool = True
+    shared_group: Optional[str] = None # interference group (§4.1)
+    kind: str = "generic"              # ici | dcn | pcie | rdma | ...
+    axis: Optional[str] = None         # mesh axis (TPU fabrics)
+    size: int = 2                      # participants along the path
+
+    def __post_init__(self):
+        if self.capacity <= 0:
+            raise FabricError(f"path {self.name}: capacity must be > 0")
+        if self.units not in (BYTES_PER_S, OPS_PER_S):
+            raise FabricError(f"path {self.name}: unknown units {self.units!r}")
+
+    @property
+    def bw(self) -> float:
+        """Legacy alias for ``capacity`` (bytes/s paths)."""
+        return self.capacity
+
+    @property
+    def group(self) -> str:
+        return self.shared_group or self.name
+
+    def time_for(self, amount: float, *, both_directions: bool = False) -> float:
+        """Transfer/service time for `amount` (path units x seconds).
+        Opposite-direction traffic multiplexes, so both_directions does
+        not slow a bidirectional path down."""
+        if amount <= 0:
+            return 0.0
+        return self.latency + amount / self.capacity
+
+
+class Fabric(Mapping):
+    """A set of named paths + the fabric-wide concurrency discount.
+
+    Mapping protocol gives ``fabric["pcie:host"]``, iteration and
+    ``len`` — drop-in for the old ``Dict[str, PathSpec]`` tables.
+    """
+
+    def __init__(self, paths: Union[Iterable[Path], Mapping[str, Path]] = (),
+                 *, concurrency_discount: float = 0.0):
+        if isinstance(paths, Mapping):
+            paths = paths.values()
+        self._paths: Dict[str, Path] = {}
+        for p in paths:
+            self.add(p)
+        if not 0.0 <= concurrency_discount < 1.0:
+            raise FabricError("concurrency_discount must be in [0, 1)")
+        self.concurrency_discount = float(concurrency_discount)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def of(cls, *paths: Path, concurrency_discount: float = 0.0) -> "Fabric":
+        return cls(paths, concurrency_discount=concurrency_discount)
+
+    def add(self, path: Path) -> "Fabric":
+        if path.name in self._paths:
+            raise FabricError(f"duplicate path {path.name}")
+        self._paths[path.name] = path
+        return self
+
+    # -- Mapping protocol ----------------------------------------------
+    def __getitem__(self, name: str) -> Path:
+        return self._paths[name]
+
+    def __iter__(self):
+        return iter(self._paths)
+
+    def __len__(self) -> int:
+        return len(self._paths)
+
+    def __repr__(self) -> str:
+        names = ", ".join(self._paths)
+        return f"Fabric({names}; discount={self.concurrency_discount})"
+
+    # -- semantics ------------------------------------------------------
+    def direction_capacity(self, name: str, direction: str) -> float:
+        p = self[name]
+        if direction == IN and not p.bidirectional:
+            return 0.0
+        return p.capacity
+
+    def validate(self, alt: "Alternative") -> None:
+        """Check every Use references a known path in matching units."""
+        for u in alt.uses:
+            if u.path not in self._paths:
+                raise FabricError(
+                    f"alternative {alt.name}: unknown path {u.path!r} "
+                    f"(fabric has {sorted(self._paths)})")
+            if u.units is not None and u.units != self[u.path].units:
+                raise FabricError(
+                    f"alternative {alt.name}: use on {u.path} declared in "
+                    f"{u.units} but the path is {self[u.path].units}")
+
+    def ledger(self) -> "BudgetLedger":
+        return BudgetLedger(self)
+
+    def router(self) -> "MultipathRouter":
+        return MultipathRouter(self)
+
+
+# ----------------------------------------------------------------------
+# work descriptions
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Use:
+    """Traffic one unit of work places on one path, per direction, in
+    the path's units. ``units`` is an optional declaration checked
+    against the path (bytes/s vs ops/s)."""
+    path: str
+    out: float = 0.0
+    in_: float = 0.0
+    units: Optional[str] = None
+
+    # legacy field names (planner.PathUse)
+    @property
+    def out_bytes(self) -> float:
+        return self.out
+
+    @property
+    def in_bytes(self) -> float:
+        return self.in_
+
+
+@dataclass
+class Alternative:
+    """One way to implement the functionality (paper Figure 14/16)."""
+    name: str
+    uses: List[Use]
+    compute_rate: float = math.inf     # units of work/s the endpoint sustains
+    criteria: Dict[str, float] = field(default_factory=dict)
+    # e.g. {"host_cpu": 0.2, "latency_us": 4.6, "net_utilization": 1.0}
+
+    def solo_rate(self, fabric: Mapping) -> float:
+        """Peak work units/s using this alternative alone (no sharing,
+        no discount — a single flow)."""
+        rate = self.compute_rate
+        for u in self.uses:
+            cap = fabric[u.path].capacity
+            if u.out > 0:
+                rate = min(rate, cap / u.out)
+            if u.in_ > 0:
+                rate = min(rate, cap / u.in_)
+        return rate
+
+
+@dataclass
+class Allocation:
+    alternative: str
+    rate: float                        # work units/s granted
+    bottleneck: str                    # what stopped further allocation
+
+
+# ----------------------------------------------------------------------
+# the budget ledger
+# ----------------------------------------------------------------------
+
+class BudgetLedger:
+    """Per-direction budget accounting over a Fabric.
+
+    Every (path, direction) starts with the path's direction capacity.
+    Flows reserve rate against it and may release it back. The §4.1
+    concurrency discount lives here and only here: a path's *effective*
+    capacity drops to ``capacity * (1 - discount)`` while more than one
+    distinct flow holds it or any path in its ``shared_group``.
+
+    ``checkpoint()`` / ``restore()`` snapshot the whole ledger, so a
+    router can explore an allocation and roll it back.
+    """
+
+    def __init__(self, fabric: Fabric):
+        self.fabric = fabric
+        # (path, dir) -> total reserved rate (path units)
+        self._reserved: Dict[Tuple[str, str], float] = {
+            (name, d): 0.0 for name in fabric for d in _DIRS}
+        # (flow, path) -> reserved (out, in) — release bookkeeping
+        self._by_flow: Dict[Tuple[str, str], Tuple[float, float]] = {}
+
+    # -- holders / discount --------------------------------------------
+    def holders(self, name: str) -> Set[str]:
+        """Distinct flows active on this path's interference group."""
+        group = self.fabric[name].group
+        return {flow for (flow, pname), (o, i) in self._by_flow.items()
+                if (o > 0 or i > 0) and self.fabric[pname].group == group}
+
+    def effective_capacity(self, name: str, direction: str,
+                           *, joining: Optional[str] = None) -> float:
+        """Direction capacity after the concurrency discount, assuming
+        `joining` (if given) becomes an additional holder."""
+        base = self.fabric.direction_capacity(name, direction)
+        holders = self.holders(name)
+        if joining is not None:
+            holders = holders | {joining}
+        if len(holders) > 1 and self.fabric.concurrency_discount > 0.0:
+            base *= 1.0 - self.fabric.concurrency_discount
+        return base
+
+    def available(self, name: str, direction: str,
+                  *, joining: Optional[str] = None) -> float:
+        cap = self.effective_capacity(name, direction, joining=joining)
+        return max(0.0, cap - self._reserved[(name, direction)])
+
+    def headroom(self, name: str) -> float:
+        """min over directions of what is still free on `name`."""
+        return min(self.available(name, OUT), self.available(name, IN))
+
+    # -- reserve / release ---------------------------------------------
+    def reserve(self, name: str, *, out: float = 0.0, in_: float = 0.0,
+                flow: str = "default", strict: bool = True) -> bool:
+        """Reserve rate on a path. Strict mode raises InsufficientBudget
+        (and reserves nothing) when a direction would be over-committed;
+        non-strict returns False instead."""
+        if name not in self.fabric:
+            raise FabricError(f"unknown path {name!r}")
+        if out < 0 or in_ < 0:
+            raise FabricError("reservations must be non-negative")
+        if out == 0.0 and in_ == 0.0:
+            return True
+        eps = 1e-9
+        for direction, amt in ((OUT, out), (IN, in_)):
+            if amt <= 0:
+                continue
+            avail = self.available(name, direction, joining=flow)
+            if amt > avail * (1 + eps) + eps:
+                if strict:
+                    raise InsufficientBudget(
+                        f"{name}:{direction}: requested {amt:.6g}, "
+                        f"available {avail:.6g} (flow={flow})")
+                return False
+        self._reserved[(name, OUT)] += out
+        self._reserved[(name, IN)] += in_
+        po, pi = self._by_flow.get((flow, name), (0.0, 0.0))
+        self._by_flow[(flow, name)] = (po + out, pi + in_)
+        return True
+
+    def release(self, name: str, *, out: float = 0.0, in_: float = 0.0,
+                flow: str = "default") -> None:
+        """Release previously reserved rate; releasing more than the
+        flow holds is an error (conservation)."""
+        po, pi = self._by_flow.get((flow, name), (0.0, 0.0))
+        eps = 1e-9 * max(1.0, po, pi)
+        if out > po + eps or in_ > pi + eps:
+            raise InsufficientBudget(
+                f"{name}: flow {flow} releasing ({out:.6g},{in_:.6g}) "
+                f"but holds ({po:.6g},{pi:.6g})")
+        self._reserved[(name, OUT)] = max(0.0, self._reserved[(name, OUT)] - out)
+        self._reserved[(name, IN)] = max(0.0, self._reserved[(name, IN)] - in_)
+        no, ni = max(0.0, po - out), max(0.0, pi - in_)
+        if no <= 0.0 and ni <= 0.0:
+            self._by_flow.pop((flow, name), None)
+        else:
+            self._by_flow[(flow, name)] = (no, ni)
+
+    def release_flow(self, flow: str) -> None:
+        """Release everything a flow holds, across all paths."""
+        for (f, name), (o, i) in list(self._by_flow.items()):
+            if f == flow:
+                self.release(name, out=o, in_=i, flow=flow)
+
+    def reserve_alternative(self, alt: Alternative, rate: float,
+                            *, flow: Optional[str] = None,
+                            strict: bool = True) -> bool:
+        """Reserve `rate` work units/s worth of an alternative's uses,
+        atomically (all uses or none — also when a strict reserve
+        raises mid-way)."""
+        flow = flow if flow is not None else alt.name
+        token = self.checkpoint()
+        try:
+            for u in alt.uses:
+                ok = self.reserve(u.path, out=rate * u.out, in_=rate * u.in_,
+                                  flow=flow, strict=strict)
+                if not ok:
+                    self.restore(token)
+                    return False
+        except InsufficientBudget:
+            self.restore(token)
+            raise
+        return True
+
+    # -- snapshot -------------------------------------------------------
+    def checkpoint(self):
+        return dict(self._reserved), dict(self._by_flow)
+
+    def restore(self, token) -> None:
+        reserved, by_flow = token
+        self._reserved = dict(reserved)
+        self._by_flow = dict(by_flow)
+
+    def reserved(self, name: str, direction: str) -> float:
+        return self._reserved[(name, direction)]
+
+
+# ----------------------------------------------------------------------
+# the router (§4.2, executable)
+# ----------------------------------------------------------------------
+
+class MultipathRouter:
+    """Turns Alternatives + a demand/criteria spec into rate allocations."""
+
+    def __init__(self, fabric: Fabric):
+        self.fabric = fabric
+
+    # -- step 2: rank ---------------------------------------------------
+    def rank(self, alts: Sequence[Alternative], key: str = "rate",
+             prefer: Optional[Sequence[str]] = None) -> List[Alternative]:
+        """Rank by solo rate (default) or an explicit criterion
+        (lower-is-better for latency_us/host_cpu, higher for the rest)."""
+        if prefer:
+            order = {n: i for i, n in enumerate(prefer)}
+            return sorted(alts, key=lambda a: order.get(a.name, len(order)))
+        if key == "rate":
+            return sorted(alts, key=lambda a: -a.solo_rate(self.fabric))
+        sign = 1.0 if key in ("latency_us", "host_cpu") else -1.0
+        return sorted(alts, key=lambda a: sign * a.criteria.get(key, math.inf))
+
+    # -- step 3: greedy combine ----------------------------------------
+    def allocate(self, alts_ranked: Sequence[Alternative],
+                 demand: float = math.inf,
+                 *, ledger: Optional[BudgetLedger] = None,
+                 ) -> Tuple[List[Allocation], float]:
+        """Give each alternative in order as much rate as the remaining
+        budgets allow; stop when demand is met or everything saturates.
+        Mutates `ledger` if given (so callers can pre-reserve primary
+        traffic); returns (allocations, total_rate)."""
+        led = ledger if ledger is not None else self.fabric.ledger()
+        allocs: List[Allocation] = []
+        total = 0.0
+        for alt in alts_ranked:
+            self.fabric.validate(alt)
+            if total >= demand:
+                break
+            rate = min(alt.compute_rate, demand - total)
+            bottleneck = "compute" if rate == alt.compute_rate else "demand"
+            demand_per_dir: Dict[Tuple[str, str], float] = {}
+            for u in alt.uses:     # aggregate: two Uses of one path add up
+                if u.out > 0:
+                    demand_per_dir[(u.path, OUT)] = \
+                        demand_per_dir.get((u.path, OUT), 0.0) + u.out
+                if u.in_ > 0:
+                    demand_per_dir[(u.path, IN)] = \
+                        demand_per_dir.get((u.path, IN), 0.0) + u.in_
+            for (pname, direction), amt in demand_per_dir.items():
+                r = led.available(pname, direction, joining=alt.name) / amt
+                if r < rate:
+                    rate, bottleneck = r, f"{pname}:{direction}"
+            if rate <= 0:
+                allocs.append(Allocation(alt.name, 0.0, bottleneck))
+                continue
+            led.reserve_alternative(alt, rate)
+            total += rate
+            allocs.append(Allocation(alt.name, rate, bottleneck))
+        return allocs, total
+
+    def route(self, alts: Sequence[Alternative], demand: float = math.inf,
+              *, key: str = "rate", prefer: Optional[Sequence[str]] = None,
+              ledger: Optional[BudgetLedger] = None,
+              ) -> Tuple[List[Allocation], float]:
+        """rank + allocate in one call."""
+        return self.allocate(self.rank(alts, key=key, prefer=prefer),
+                             demand, ledger=ledger)
+
+    # -- fixed-ratio mixing (DrTM-KV A4+A5) ----------------------------
+    def blend(self, weighted: Sequence[Tuple[Alternative, float]],
+              ) -> Tuple[float, List[Allocation]]:
+        """Scale a fixed mix of alternatives (weights = fraction of work
+        each serves, e.g. cache hit/miss masses) up to the first
+        saturated resource. The §4.1 discount applies to every path
+        whose interference group is touched by more than one member of
+        the mix. Returns (total work units/s, per-member allocations)."""
+        usage: Dict[Tuple[str, str], float] = {}
+        touchers: Dict[str, Set[str]] = {}
+        total = math.inf
+        for alt, w in weighted:
+            self.fabric.validate(alt)
+            if w < 0:
+                raise FabricError(f"negative weight for {alt.name}")
+            if w == 0:
+                continue            # inactive member: no usage, no discount
+            if math.isfinite(alt.compute_rate):
+                total = min(total, alt.compute_rate / w)
+            for u in alt.uses:
+                usage[(u.path, OUT)] = usage.get((u.path, OUT), 0.0) + w * u.out
+                usage[(u.path, IN)] = usage.get((u.path, IN), 0.0) + w * u.in_
+                group = self.fabric[u.path].group
+                touchers.setdefault(group, set()).add(alt.name)
+        bottleneck = "compute" if math.isfinite(total) else "unbounded"
+        for (name, direction), amt in usage.items():
+            if amt <= 0:
+                continue
+            cap = self.fabric.direction_capacity(name, direction)
+            if len(touchers[self.fabric[name].group]) > 1:
+                cap *= 1.0 - self.fabric.concurrency_discount
+            r = cap / amt
+            if r < total:
+                total, bottleneck = r, f"{name}:{direction}"
+        if not math.isfinite(total):
+            raise FabricError("blend is unbounded: no use and no compute cap")
+        return total, [Allocation(alt.name, w * total, bottleneck)
+                       for alt, w in weighted]
+
+    # -- the B_slow <= P − N rule --------------------------------------
+    def slack(self, primary: Alternative, path: str) -> float:
+        """Bandwidth left on `path` after the primary functionality
+        saturates its own bottleneck. The primary's demand is clamped
+        per direction (a direction it over-commits contributes zero
+        slack, never a negative ledger)."""
+        led = self.fabric.ledger()
+        rate = primary.solo_rate(self.fabric)
+        for u in primary.uses:
+            led.reserve(u.path,
+                        out=min(rate * u.out, led.available(u.path, OUT)),
+                        in_=min(rate * u.in_, led.available(u.path, IN)),
+                        flow="primary")
+        return led.headroom(path)
+
+
+# ----------------------------------------------------------------------
+# calibrated case-study fabrics (paper §5.1)
+# ----------------------------------------------------------------------
+
+def linefs_fabric(N: float, P: float, dma_bw: Optional[float] = None) -> Fabric:
+    """LineFS §5.1 testbed: network N, internal link P, weak DMA engine
+    (§3.3, ~0.7 P). `internal` and `dma` share physical PCIe media."""
+    dma = dma_bw if dma_bw is not None else 0.7 * P
+    return Fabric.of(
+        Path("net", N, BYTES_PER_S, latency=1e-6, kind="ici",
+             shared_group="net"),
+        Path("internal", P, BYTES_PER_S, latency=3e-7, kind="pcie",
+             shared_group="pcie"),
+        Path("dma", dma, BYTES_PER_S, latency=3e-7, kind="pcie",
+             shared_group="pcie"),
+    )
+
+
+def linefs_replication_alternatives(N: float, P: float, ratio: float,
+                                    soc_rate: float = math.inf,
+                                    ) -> List[Alternative]:
+    """File replication of 1 byte of file data (paper Figure 14).
+
+    A1: offload via ③  — the file crosses the shared internal link twice
+        (1x raw in, ratio x compressed out) and the network (ratio);
+    A2: offload via ③* — DMA path, bypasses the internal link;
+    A3: direct host WRITE via ① — no compression, full network bytes.
+    """
+    return [
+        Alternative("A1", uses=[
+            Use("internal", out=1.0 + ratio),     # double crossing
+            Use("net", out=ratio),
+        ], compute_rate=soc_rate,
+            criteria={"host_cpu": 0.1, "net_utilization": 1.0}),
+        Alternative("A2", uses=[
+            Use("dma", out=1.0),
+            Use("net", out=ratio),
+        ], compute_rate=soc_rate,
+            criteria={"host_cpu": 0.1, "net_utilization": 1.0}),
+        Alternative("A3", uses=[
+            Use("net", out=1.0),
+        ], criteria={"host_cpu": 1.0, "net_utilization": ratio}),
+    ]

@@ -1,7 +1,7 @@
-"""Communication-path model (paper §2.3/§3, Figure 1 for TPU).
+"""TPU rendition of the paper's path model (§2.3/§3, Figure 1).
 
 A mesh exposes several *paths*, each with its own bandwidth, latency,
-directionality and sharing group — the TPU rendition of the paper's
+directionality and sharing group — the TPU mapping of the paper's
 ①/②/③/③*:
 
   ici:<axis>   — intra-pod ICI ring on mesh axis `axis`   (paper ①/②)
@@ -10,62 +10,54 @@ directionality and sharing group — the TPU rendition of the paper's
   pcie:host    — host<->device staging (checkpoint/offload) (paper ③*:
                  bypasses ICI/DCN but has a weak engine)
 
-`enumerate_paths(mesh)` builds the PathSpec table; planner/interference
-consume it. Bandwidths are per chip, per direction; `bidirectional=True`
-means opposite-direction flows multiplex (paper Fig 5: READ+WRITE
-reaching 2x the one-way limit).
+`enumerate_paths(mesh)` builds the **Fabric** (core/fabric.py) that the
+router/roofline/charz layers consume. Bandwidths are per chip, per
+direction; `bidirectional=True` means opposite-direction flows multiplex
+(paper Fig 5: READ+WRITE reaching 2x the one-way limit).
+
+``PathSpec`` survives as a compatibility constructor with the historical
+positional signature; it returns a fabric ``Path``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.core import hw
+from repro.core.fabric import BYTES_PER_S, Fabric, Path
 
 
-@dataclass(frozen=True)
-class PathSpec:
-    name: str                 # "ici:data", "dcn:pod", "pcie:host"
-    kind: str                 # ici | dcn | pcie
-    axis: Optional[str]       # mesh axis this path runs over (None for pcie)
-    size: int                 # number of participants along the path
-    bw: float                 # bytes/s per chip per direction
-    latency: float            # seconds, one hop
-    bidirectional: bool       # opposite flows multiplex (2x aggregate)
-    shared_group: str         # interference group (paths sharing media)
-
-    def time_for(self, bytes_per_chip: float, *, both_directions: bool = False) -> float:
-        """Transfer time. If traffic uses both directions of a
-        bidirectional path it still completes in bytes/bw (multiplexed);
-        same-direction traffic from two flows halves each flow's share —
-        that logic lives in the InterferenceModel."""
-        if bytes_per_chip <= 0:
-            return 0.0
-        return self.latency + bytes_per_chip / self.bw
+def PathSpec(name: str, kind: str = "generic", axis: Optional[str] = None,
+             size: int = 2, bw: float = 1.0, latency: float = 0.0,
+             bidirectional: bool = True,
+             shared_group: Optional[str] = None) -> Path:
+    """Deprecated constructor kept for the pre-Fabric call sites
+    (positional order: name, kind, axis, size, bw, latency,
+    bidirectional, shared_group). Returns a ``fabric.Path``."""
+    return Path(name=name, capacity=bw, units=BYTES_PER_S, latency=latency,
+                bidirectional=bidirectional, shared_group=shared_group,
+                kind=kind, axis=axis, size=size)
 
 
-def enumerate_paths(mesh_shape: Dict[str, int]) -> Dict[str, PathSpec]:
-    """mesh_shape: {"pod": 2, "data": 16, "model": 16} (or without pod)."""
-    paths: Dict[str, PathSpec] = {}
+def enumerate_paths(mesh_shape: Dict[str, int]) -> Fabric:
+    """mesh_shape: {"pod": 2, "data": 16, "model": 16} (or without pod).
+    Returns the TPU Fabric (a Mapping[str, Path], so existing dict-style
+    consumers keep working)."""
+    fabric = Fabric()
     for axis, size in mesh_shape.items():
         if size <= 1:
             continue
         if axis == "pod":
-            paths["dcn:pod"] = PathSpec(
-                name="dcn:pod", kind="dcn", axis="pod", size=size,
-                bw=hw.DCN_BW_PER_CHIP, latency=hw.DCN_LAT,
-                bidirectional=True, shared_group="dcn")
+            fabric.add(Path("dcn:pod", hw.DCN_BW_PER_CHIP,
+                            latency=hw.DCN_LAT, kind="dcn", axis="pod",
+                            size=size, shared_group="dcn"))
         else:
-            paths[f"ici:{axis}"] = PathSpec(
-                name=f"ici:{axis}", kind="ici", axis=axis, size=size,
-                bw=hw.ICI_BW_PER_LINK * hw.ICI_LINKS_PER_AXIS,
-                latency=hw.ICI_LAT, bidirectional=True,
-                shared_group="ici")
-    paths["pcie:host"] = PathSpec(
-        name="pcie:host", kind="pcie", axis=None, size=1,
-        bw=hw.PCIE_BW, latency=hw.PCIE_LAT,
-        bidirectional=True, shared_group="pcie")
-    return paths
+            fabric.add(Path(f"ici:{axis}",
+                            hw.ICI_BW_PER_LINK * hw.ICI_LINKS_PER_AXIS,
+                            latency=hw.ICI_LAT, kind="ici", axis=axis,
+                            size=size, shared_group="ici"))
+    fabric.add(Path("pcie:host", hw.PCIE_BW, latency=hw.PCIE_LAT,
+                    kind="pcie", size=1, shared_group="pcie"))
+    return fabric
 
 
 # ----------------------------------------------------------------------
@@ -88,11 +80,11 @@ def collective_bytes_per_chip(op: str, payload_bytes: float, n: int) -> float:
     raise ValueError(op)
 
 
-def collective_time(op: str, payload_bytes: float, path: PathSpec) -> float:
+def collective_time(op: str, payload_bytes: float, path: Path) -> float:
     b = collective_bytes_per_chip(op, payload_bytes, path.size)
     steps = {"all-reduce": 2 * (path.size - 1),
              "all-gather": path.size - 1,
              "reduce-scatter": path.size - 1,
              "all-to-all": path.size - 1,
              "collective-permute": 1}[op]
-    return steps * path.latency + b / path.bw
+    return steps * path.latency + b / path.capacity

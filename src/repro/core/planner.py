@@ -1,169 +1,71 @@
-"""The paper's §4.2 optimization guideline, executable.
+"""DEPRECATED shim — the §4.2 planner now lives in ``core/fabric.py``.
 
-Given a *functionality* (gradient sync, checkpoint replication, KV get),
-the designer:
+``PathPlanner`` delegated to ``fabric.MultipathRouter`` over a
+``Fabric`` built from the path table it is given; ``PathUse`` maps onto
+``fabric.Use`` and the LineFS helpers forward to the calibrated fabric
+constructors. New code should use the Fabric API directly:
 
-  1. devises Alternatives — each a bundle of PathUses (bytes crossing
-     each path, per direction, per unit of useful work) plus an optional
-     endpoint compute limit (the "wimpy SoC" premise);
-  2. evaluates and ranks them against system criteria;
-  3. greedily combines them until a shared resource saturates.
+    from repro.core.fabric import Fabric, MultipathRouter, Use
+    router = fabric.router()
+    allocs, total = router.route(alternatives, demand)
 
-The per-direction budget model reproduces the paper's findings natively:
-  * opposite-direction flows multiplex on a bidirectional link (Fig 5:
-    READ+WRITE -> ~2x one-way bandwidth) because they draw from
-    different direction budgets;
-  * a path that crosses the same link twice (paper path-③) consumes both
-    direction budgets at once — the "hidden bottleneck", and the reason
-    its traffic must stay <= P − N when sharing with primary traffic.
+This module keeps the historical import surface so pre-Fabric call
+sites (and the paper-calibrated tests) keep working unchanged.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.paths import PathSpec
+from repro.core.fabric import (Allocation, Alternative, Fabric,
+                               MultipathRouter, Use, linefs_fabric,
+                               linefs_replication_alternatives)
 
 
-@dataclass(frozen=True)
-class PathUse:
-    """Traffic one unit of work places on one path."""
-    path: str
-    out_bytes: float = 0.0
-    in_bytes: float = 0.0
-
-
-@dataclass
-class Alternative:
-    """One way to implement the functionality (paper Figure 14/16)."""
-    name: str
-    uses: List[PathUse]
-    compute_rate: float = math.inf     # units/s the endpoint can process
-    criteria: Dict[str, float] = field(default_factory=dict)
-    # e.g. {"host_cpu": 0.2, "latency_us": 4.6, "net_utilization": 1.0}
-
-    def solo_rate(self, paths: Dict[str, PathSpec]) -> float:
-        """Peak units/s using this alternative alone."""
-        rate = self.compute_rate
-        for u in self.uses:
-            bw = paths[u.path].bw
-            if u.out_bytes > 0:
-                rate = min(rate, bw / u.out_bytes)
-            if u.in_bytes > 0:
-                rate = min(rate, bw / u.in_bytes)
-        return rate
-
-
-@dataclass
-class Allocation:
-    alternative: str
-    rate: float                        # units/s granted
-    bottleneck: str                    # what stopped further allocation
+def PathUse(path: str, out_bytes: float = 0.0, in_bytes: float = 0.0) -> Use:
+    """Deprecated alias for ``fabric.Use`` (legacy field names)."""
+    return Use(path=path, out=out_bytes, in_=in_bytes)
 
 
 class PathPlanner:
-    """Greedy §4.2 combiner over per-direction path budgets."""
+    """Deprecated: a thin wrapper around ``fabric.MultipathRouter``.
 
-    def __init__(self, paths: Dict[str, PathSpec]):
-        self.paths = paths
+    Accepts any ``Mapping[str, Path]`` (including a ``Fabric``); the old
+    greedy semantics are preserved exactly — no concurrency discount is
+    applied unless the mapping is a Fabric carrying one.
+    """
 
-    def _budgets(self) -> Dict[Tuple[str, str], float]:
-        b: Dict[Tuple[str, str], float] = {}
-        for name, p in self.paths.items():
-            b[(name, "out")] = p.bw
-            b[(name, "in")] = p.bw if p.bidirectional else 0.0
-        return b
+    def __init__(self, paths):
+        warnings.warn("PathPlanner is deprecated; use "
+                      "repro.core.fabric.MultipathRouter", DeprecationWarning,
+                      stacklevel=2)
+        fabric = paths if isinstance(paths, Fabric) else Fabric(dict(paths))
+        self.fabric = fabric
+        self.paths = fabric                  # legacy attribute
+        self._router = MultipathRouter(fabric)
 
-    def rank(self, alts: Sequence[Alternative],
-             key: str = "rate",
+    def rank(self, alts: Sequence[Alternative], key: str = "rate",
              prefer: Optional[Sequence[str]] = None) -> List[Alternative]:
-        """Step 2: rank by solo rate (default) or an explicit criterion
-        (lower-is-better for latency_us/host_cpu, higher for the rest)."""
-        if prefer:
-            order = {n: i for i, n in enumerate(prefer)}
-            return sorted(alts, key=lambda a: order.get(a.name, len(order)))
-        if key == "rate":
-            return sorted(alts, key=lambda a: -a.solo_rate(self.paths))
-        sign = 1.0 if key in ("latency_us", "host_cpu") else -1.0
-        return sorted(alts, key=lambda a: sign * a.criteria.get(key, math.inf))
+        return self._router.rank(alts, key=key, prefer=prefer)
 
     def combine_greedy(self, alts_ranked: Sequence[Alternative],
-                       demand: float = math.inf) -> Tuple[List[Allocation], float]:
-        """Step 3: give each alternative in order as much rate as the
-        remaining budgets allow; stop when demand is met or everything
-        saturates. Returns (allocations, total_rate)."""
-        budgets = self._budgets()
-        allocs: List[Allocation] = []
-        total = 0.0
-        for alt in alts_ranked:
-            if total >= demand:
-                break
-            rate = min(alt.compute_rate, demand - total)
-            bottleneck = "compute" if rate == alt.compute_rate else "demand"
-            for u in alt.uses:
-                if u.out_bytes > 0:
-                    r = budgets[(u.path, "out")] / u.out_bytes
-                    if r < rate:
-                        rate, bottleneck = r, f"{u.path}:out"
-                if u.in_bytes > 0:
-                    r = budgets[(u.path, "in")] / u.in_bytes
-                    if r < rate:
-                        rate, bottleneck = r, f"{u.path}:in"
-            if rate <= 0:
-                allocs.append(Allocation(alt.name, 0.0, bottleneck))
-                continue
-            for u in alt.uses:
-                budgets[(u.path, "out")] -= rate * u.out_bytes
-                budgets[(u.path, "in")] -= rate * u.in_bytes
-            total += rate
-            allocs.append(Allocation(alt.name, rate, bottleneck))
-        return allocs, total
+                       demand: float = math.inf,
+                       ) -> Tuple[List[Allocation], float]:
+        return self._router.allocate(alts_ranked, demand)
 
     def slack(self, primary: Alternative, path: str) -> float:
-        """The paper's B_slow <= P − N rule: bandwidth left on `path`
-        after the primary functionality saturates its own bottleneck."""
-        budgets = self._budgets()
-        rate = primary.solo_rate(self.paths)
-        for u in primary.uses:
-            budgets[(u.path, "out")] -= rate * u.out_bytes
-            budgets[(u.path, "in")] -= rate * u.in_bytes
-        return max(0.0, min(budgets[(path, "out")], budgets[(path, "in")]))
+        return self._router.slack(primary, path)
 
 
 # ----------------------------------------------------------------------
-# LineFS §5.1 analytic alternatives (used by ckpt/ and benchmarks)
+# LineFS §5.1 helpers (deprecated names; canonical in core/fabric.py)
 # ----------------------------------------------------------------------
 
 def linefs_alternatives(N: float, P: float, ratio: float,
                         soc_rate: float = math.inf) -> List[Alternative]:
-    """File replication of 1 byte of file data.
-
-    A1: offload via ③  — file crosses the shared internal link twice
-        (1x raw in, ratio x compressed out) and the network (ratio).
-    A2: offload via ③* — DMA path, bypasses the internal link.
-    A3: direct host WRITE via ① — no compression, full network bytes.
-    N/P: network / internal-link (PCIe) bandwidth, bytes/s.
-    """
-    return [
-        Alternative("A1", uses=[
-            PathUse("internal", out_bytes=1.0 + ratio),   # double crossing
-            PathUse("net", out_bytes=ratio),
-        ], compute_rate=soc_rate, criteria={"host_cpu": 0.1, "net_utilization": 1.0}),
-        Alternative("A2", uses=[
-            PathUse("dma", out_bytes=1.0),
-            PathUse("net", out_bytes=ratio),
-        ], compute_rate=soc_rate, criteria={"host_cpu": 0.1, "net_utilization": 1.0}),
-        Alternative("A3", uses=[
-            PathUse("net", out_bytes=1.0),
-        ], criteria={"host_cpu": 1.0, "net_utilization": ratio}),
-    ]
+    return linefs_replication_alternatives(N, P, ratio, soc_rate=soc_rate)
 
 
-def linefs_paths(N: float, P: float, dma_bw: Optional[float] = None) -> Dict[str, PathSpec]:
-    dma = dma_bw if dma_bw is not None else 0.7 * P   # weak DMA engine (§3.3)
-    return {
-        "net": PathSpec("net", "ici", None, 2, N, 1e-6, True, "net"),
-        "internal": PathSpec("internal", "pcie", None, 2, P, 3e-7, True, "pcie"),
-        "dma": PathSpec("dma", "pcie", None, 2, dma, 3e-7, True, "pcie"),
-    }
+def linefs_paths(N: float, P: float, dma_bw: Optional[float] = None) -> Fabric:
+    return linefs_fabric(N, P, dma_bw)

@@ -55,6 +55,8 @@ def build_report(*, arch: str, shape: str, mesh_name: str,
                  model_flops: float, chips: int,
                  memory_bytes_per_chip: Optional[float] = None,
                  note: str = "") -> RooflineReport:
+    if isinstance(cost, (list, tuple)):   # old jax: per-device list of dicts
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     traffic: TrafficSummary = summarize_traffic(hlo_text, mesh_axes)

@@ -26,13 +26,25 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-fabric", action="store_true",
+                    help="plan decode cache placement on the §5.2 fabric")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    fabric = None
+    if args.kv_fabric:
+        from repro.serve.disagg import kv_fabric
+        fabric = kv_fabric()
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                      fabric=fabric)
+    if eng.placement is not None:
+        p = eng.placement
+        print(f"[serve] decode cache placement: {p.location} "
+              f"({p.rate / 1e6:.1f}M gets/s, "
+              f"+{(p.rate / p.baseline_rate - 1) * 100:.0f}% vs baseline)")
 
     rng = np.random.default_rng(0)
     reqs = []

@@ -1,2 +1,4 @@
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.disagg import DisaggKV, KVStoreParams
+from repro.serve.disagg import (DisaggKV, KVStoreParams, PathCosts,
+                                PlacementPlan, kv_alternatives, kv_fabric,
+                                plan_decode_placement)

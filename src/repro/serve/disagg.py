@@ -13,12 +13,13 @@ A disaggregated key-value store with a cluster-chaining hash index
 
 The data plane is real: numpy hash index (cluster chaining), value
 store, SoC-memory value cache with hot-key replication (Advice #1).
-The *performance* plane is the calibrated path model (latencies and
-per-endpoint rate caps from the paper's Figure 3/17 measurements),
-because this container has no RDMA fabric — every number used is listed
-in PathCosts and cross-checked against the paper in
+The *performance* plane is the calibrated path Fabric (latencies and
+per-endpoint rate caps from the paper's Figure 3/17 measurements, as
+ops/s paths), because this container has no RDMA fabric — every number
+used is listed in PathCosts and cross-checked against the paper in
 benchmarks/bench_kvserve.py. Throughput composition (e.g. A4+A5) goes
-through the §4.2 greedy planner.
+through the fabric's MultipathRouter, with the §4.1 concurrency
+discount applied once by the fabric, not per call site.
 """
 from __future__ import annotations
 
@@ -27,8 +28,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.planner import Allocation, Alternative, PathPlanner, PathUse
-from repro.core.paths import PathSpec
+from repro.core.fabric import (Allocation, Alternative, Fabric,
+                               MultipathRouter, OPS_PER_S, Path, Use)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,92 @@ class PathCosts:
     dma_rate: float = 30e6           # ③* small-payload ops/s (Fig 11)
     concurrency_discount: float = 0.125  # §4.1: paths running concurrently
     #                                      lose 7–15% on shared resources
+
+
+def kv_fabric(costs: PathCosts = PathCosts()) -> Fabric:
+    """The §5.2 RDMA fabric: every endpoint rate cap is an ops/s path;
+    each path is its own interference group, and the fabric carries the
+    §4.1 concurrency discount (applied once, by the ledger/router —
+    never at call sites)."""
+    c = costs
+    mk = lambda name, rate: Path(name, rate, OPS_PER_S, latency=1e-6,
+                                 kind="rdma")
+    return Fabric.of(
+        mk("host_read", c.read_host_rate),
+        mk("soc_read", c.read_soc_rate),
+        mk("nic_cores", c.nic_core_rate),
+        mk("soc_send", c.send_soc_rate),
+        mk("soc_cpu", c.soc_cpu_rate),
+        mk("dma", c.dma_rate),
+        concurrency_discount=c.concurrency_discount,
+    )
+
+
+def kv_alternatives(costs: PathCosts = PathCosts(),
+                    reads_per_index: float = 1.0) -> Dict[str, Alternative]:
+    """The five offload alternatives of Figure 16, declared in ops/s
+    units against kv_fabric()."""
+    c, r, ops = costs, reads_per_index, OPS_PER_S
+    return {
+        "A1": Alternative("A1", uses=[
+            Use("host_read", out=r + 1, units=ops),
+            Use("nic_cores", out=r + 1, units=ops)],
+            criteria={"latency_us": (r + 1) * c.read_host_us}),
+        "A2": Alternative("A2", uses=[
+            Use("soc_send", out=1, units=ops), Use("soc_cpu", out=1, units=ops),
+            Use("dma", out=1, units=ops), Use("nic_cores", out=1, units=ops)],
+            criteria={"latency_us": c.send_soc_us + c.dma_soc_host_us}),
+        "A3": Alternative("A3", uses=[
+            Use("soc_send", out=1, units=ops), Use("soc_cpu", out=1, units=ops),
+            Use("dma", out=1, units=ops), Use("nic_cores", out=1, units=ops)],
+            criteria={"latency_us": c.send_soc_us + c.dma_soc_host_us}),
+        "A4": Alternative("A4", uses=[
+            Use("soc_read", out=r, units=ops),
+            Use("host_read", out=1, units=ops),
+            # mixed host+SoC endpoints underuse the shared NIC cores
+            Use("nic_cores", out=(r + 1) / c.mixed_nic_efficiency, units=ops)],
+            criteria={"latency_us": r * c.read_soc_us + c.read_host_us}),
+        "A5": Alternative("A5", uses=[
+            Use("soc_read", out=r + 1, units=ops),
+            Use("nic_cores", out=r + 1, units=ops)],
+            criteria={"latency_us": (r + 1) * c.read_soc_us}),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Decode-cache placement decision for the serving engine (§5.2
+    wired into serving): where the hot value/KV-cache reads should land
+    and the predicted get rate of that choice."""
+    location: str                      # "soc_cache" | "host"
+    rate: float                        # predicted gets/s of the choice
+    baseline_rate: float               # host-only (A1) rate
+    hit_mass: float
+    allocations: List[Allocation]
+
+
+def plan_decode_placement(fabric: Fabric, *, hit_mass: float = 0.7,
+                          costs: Optional[PathCosts] = None,
+                          reads_per_index: float = 1.0) -> PlacementPlan:
+    """Choose where the decode cache lives by routing the §5.2
+    alternatives over `fabric`: SoC cache placement (A5 hits + A4
+    misses, blended at `hit_mass`) vs the best cache-less alternative
+    (A1 host-only or A4 SoC-index). Pass the same `costs` the fabric
+    was calibrated with (use coefficients like mixed_nic_efficiency
+    come from it, not from the fabric)."""
+    alts = kv_alternatives(costs if costs is not None else PathCosts(),
+                           reads_per_index)
+    router = MultipathRouter(fabric)
+    for alt in alts.values():
+        fabric.validate(alt)
+    base_alt = max(("A1", "A4"), key=lambda n: alts[n].solo_rate(fabric))
+    base_rate = alts[base_alt].solo_rate(fabric)
+    total, allocs = router.blend([(alts["A5"], hit_mass),
+                                  (alts["A4"], 1.0 - hit_mass)])
+    if total > base_rate:
+        return PlacementPlan("soc_cache", total, base_rate, hit_mass, allocs)
+    return PlacementPlan("host", base_rate, base_rate, hit_mass,
+                         [Allocation(base_alt, base_rate, "solo")])
 
 
 @dataclasses.dataclass
@@ -121,47 +208,18 @@ class DisaggKV:
         return val, lat * 1e-6
 
     # ------------------------------------------------------------------
-    # throughput model (paper Fig 17b/18): planner alternatives
+    # throughput model (paper Fig 17b/18): fabric + alternatives
     # ------------------------------------------------------------------
-    def paths(self) -> Dict[str, PathSpec]:
-        c = self.c
-        mk = lambda name, rate: PathSpec(name, "ici", None, 2, rate, 1e-6,
-                                         True, name)
-        return {
-            "host_read": mk("host_read", c.read_host_rate),
-            "soc_read": mk("soc_read", c.read_soc_rate),
-            "nic_cores": mk("nic_cores", c.nic_core_rate),
-            "soc_send": mk("soc_send", c.send_soc_rate),
-            "soc_cpu": mk("soc_cpu", c.soc_cpu_rate),
-            "dma": mk("dma", c.dma_rate),
-        }
+    def fabric(self) -> Fabric:
+        """The §5.2 RDMA fabric (see module-level kv_fabric)."""
+        return kv_fabric(self.c)
+
+    def paths(self) -> Fabric:
+        """Deprecated alias for fabric() (pre-Fabric name)."""
+        return self.fabric()
 
     def alternatives(self, reads_per_index: float = 1.0) -> Dict[str, Alternative]:
-        r = reads_per_index
-        return {
-            "A1": Alternative("A1", uses=[
-                PathUse("host_read", out_bytes=r + 1),
-                PathUse("nic_cores", out_bytes=r + 1)],
-                criteria={"latency_us": (r + 1) * self.c.read_host_us}),
-            "A2": Alternative("A2", uses=[
-                PathUse("soc_send", out_bytes=1), PathUse("soc_cpu", out_bytes=1),
-                PathUse("dma", out_bytes=1), PathUse("nic_cores", out_bytes=1)],
-                criteria={"latency_us": self.c.send_soc_us + self.c.dma_soc_host_us}),
-            "A3": Alternative("A3", uses=[
-                PathUse("soc_send", out_bytes=1), PathUse("soc_cpu", out_bytes=1),
-                PathUse("dma", out_bytes=1), PathUse("nic_cores", out_bytes=1)],
-                criteria={"latency_us": self.c.send_soc_us + self.c.dma_soc_host_us}),
-            "A4": Alternative("A4", uses=[
-                PathUse("soc_read", out_bytes=r), PathUse("host_read", out_bytes=1),
-                # mixed host+SoC endpoints underuse the shared NIC cores
-                PathUse("nic_cores",
-                        out_bytes=(r + 1) / self.c.mixed_nic_efficiency)],
-                criteria={"latency_us": r * self.c.read_soc_us + self.c.read_host_us}),
-            "A5": Alternative("A5", uses=[
-                PathUse("soc_read", out_bytes=r + 1),
-                PathUse("nic_cores", out_bytes=r + 1)],
-                criteria={"latency_us": (r + 1) * self.c.read_soc_us}),
-        }
+        return kv_alternatives(self.c, reads_per_index)
 
     def cache_hit_mass(self) -> float:
         """Zipf probability mass of the SoC-cached (hottest) keys — the
@@ -171,27 +229,16 @@ class DisaggKV:
         w /= w.sum()
         return float(w[:len(self.soc_cached)].sum())
 
-    def combined_a4_a5(self) -> Tuple[float, List]:
+    def combined_a4_a5(self) -> Tuple[float, List[Allocation]]:
         """Paper's winning combination: cache hits go A5, misses A4; the
         hit fraction is the zipf mass of the cached keys ("cache misses
-        are rare", §5.2). Peak rate = min over resources of
-        budget / (m * A5_use + (1-m) * A4_use)."""
+        are rare", §5.2). The MultipathRouter scales the fixed mix up to
+        the first saturated resource, with the §4.1 discount applied by
+        the fabric to resources touched by both members."""
         m = self.cache_hit_mass()
-        paths = self.paths()
         alts = self.alternatives()
-        usage: Dict[str, float] = {}
-        touched: Dict[str, int] = {}
-        for frac, alt in ((m, alts["A5"]), (1 - m, alts["A4"])):
-            for u in alt.uses:
-                usage[u.path] = usage.get(u.path, 0.0) + frac * u.out_bytes
-                touched[u.path] = touched.get(u.path, 0) + 1
-        # §4.1: resources shared by concurrently-active paths lose 7–15%
-        disc = 1.0 - self.c.concurrency_discount
-        total = min(paths[p].bw * (disc if touched[p] > 1 else 1.0) / use
-                    for p, use in usage.items() if use > 0)
-        allocs = [Allocation("A5", m * total, "soc_read:out"),
-                  Allocation("A4", (1 - m) * total, "cache_miss_fraction")]
-        return total, allocs
+        router = MultipathRouter(self.fabric())
+        return router.blend([(alts["A5"], m), (alts["A4"], 1.0 - m)])
 
     def zipf_keys(self, n: int, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)

@@ -8,7 +8,10 @@ decode step advances every active slot one token with per-row positions.
 Multi-path notes (DrTM-KV mapping): the KV cache is the "value store";
 decode's cache read is the hot path the disagg layer places (batch-
 sharded on ICI for decode_32k, sequence-sharded context-parallel for
-long_500k). Sampling is greedy or temperature.
+long_500k). When a Fabric is supplied, the engine routes the §5.2
+alternatives over it at startup to pick the decode cache placement
+(SoC cache vs host) — see serve/disagg.plan_decode_placement. Sampling
+is greedy or temperature.
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.fabric import Fabric
 from repro.models import model as M
 
 
@@ -36,14 +40,22 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  max_len: int = 256, impl: str = "auto",
-                 cache_dtype=jnp.float32, seed: int = 0):
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 fabric: Optional[Fabric] = None,
+                 cache_hit_mass: float = 0.7, placement_costs=None):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.impl = slots, max_len, impl
         self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
         self.pos = jnp.zeros((slots,), jnp.int32)       # next write index
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        self.finished: List[Request] = []   # retired, not yet drained by run()
         self.key = jax.random.PRNGKey(seed)
+        self.placement = None
+        if fabric is not None:
+            from repro.serve.disagg import plan_decode_placement
+            self.placement = plan_decode_placement(
+                fabric, hit_mass=cache_hit_mass, costs=placement_costs)
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, impl=impl))
         self._prefill = jax.jit(
@@ -113,12 +125,16 @@ class ServeEngine:
                     int(self.pos[s]) >= self.max_len - 1:
                 req.done = True
                 self.active[s] = None
+                self.finished.append(req)
         return len(act)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
+        """Drive step() until queues drain; returns (and drains) the
+        requests retired since the last run() call, in retirement order
+        — the engine holds no unbounded completion history."""
         steps = 0
         while (self.queue or any(self.active)) and steps < max_steps:
             self.step()
             steps += 1
-        return done
+        completed, self.finished = self.finished, []
+        return completed

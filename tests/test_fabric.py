@@ -1,0 +1,327 @@
+"""Fabric API: budget-ledger invariants + paper-number reproduction.
+
+The ledger properties run on randomized fabrics/sequences (seeded, no
+hypothesis dependency): budgets are conserved under any allocation
+sequence, no path is over-committed, and release restores exactly.
+The router section re-derives the §5.1/§5.2 calibration that
+tests/test_planner.py asserts through the deprecated shim — here
+through the first-class API.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core.fabric import (Alternative, BYTES_PER_S, BudgetLedger, Fabric,
+                               FabricError, InsufficientBudget,
+                               MultipathRouter, OPS_PER_S, Path, Use,
+                               linefs_fabric, linefs_replication_alternatives)
+from repro.core.paths import enumerate_paths
+
+N = 200e9 / 8   # paper testbed: 200 Gbps network
+P = 256e9 / 8   # 256 Gbps internal PCIe
+
+
+# ----------------------------------------------------------------------
+# ledger properties
+# ----------------------------------------------------------------------
+
+def _random_fabric(rng: random.Random) -> Fabric:
+    n = rng.randint(2, 5)
+    paths = []
+    for i in range(n):
+        paths.append(Path(
+            f"p{i}", capacity=rng.uniform(1.0, 1e3),
+            units=rng.choice([BYTES_PER_S, OPS_PER_S]),
+            bidirectional=rng.random() < 0.7,
+            shared_group=rng.choice([None, "g1", "g2"])))
+    disc = rng.choice([0.0, 0.125])
+    return Fabric(paths, concurrency_discount=disc)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_ledger_never_overcommits(seed):
+    """Any sequence of (non-strict) reserves keeps every direction at or
+    under its raw capacity; strict over-asks raise and change nothing."""
+    rng = random.Random(seed)
+    fabric = _random_fabric(rng)
+    led = fabric.ledger()
+    flows = ["f1", "f2", "f3"]
+    for _ in range(200):
+        name = rng.choice(list(fabric))
+        flow = rng.choice(flows)
+        out = rng.uniform(0, fabric[name].capacity * 0.6)
+        in_ = rng.uniform(0, fabric[name].capacity * 0.6)
+        before = led.checkpoint()
+        ok = led.reserve(name, out=out, in_=in_, flow=flow, strict=False)
+        if not ok:
+            assert led.checkpoint() == before   # failed reserve is a no-op
+        for p in fabric:
+            for d in ("out", "in"):
+                cap = fabric.direction_capacity(p, d)
+                assert led.reserved(p, d) <= cap * (1 + 1e-9), (p, d)
+                assert led.available(p, d) >= 0.0
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_ledger_release_restores_exactly(seed):
+    """Releasing every flow returns the ledger to pristine state; the
+    sum of per-flow holdings always equals the per-path reserved total."""
+    rng = random.Random(seed)
+    fabric = _random_fabric(rng)
+    led = fabric.ledger()
+    holdings = {}
+    for k in range(100):
+        name = rng.choice(list(fabric))
+        flow = f"f{rng.randint(0, 3)}"
+        out = rng.uniform(0, fabric[name].capacity * 0.4)
+        in_ = rng.uniform(0, fabric[name].capacity * 0.4)
+        if led.reserve(name, out=out, in_=in_, flow=flow, strict=False):
+            o, i = holdings.get((flow, name), (0.0, 0.0))
+            holdings[(flow, name)] = (o + out, i + in_)
+        # invariant: totals match the per-flow view
+        for p in fabric:
+            tot_o = sum(o for (f, q), (o, i) in holdings.items() if q == p)
+            tot_i = sum(i for (f, q), (o, i) in holdings.items() if q == p)
+            assert led.reserved(p, "out") == pytest.approx(tot_o, abs=1e-6)
+            assert led.reserved(p, "in") == pytest.approx(tot_i, abs=1e-6)
+    for flow in {f for (f, _) in holdings}:
+        led.release_flow(flow)
+    for p in fabric:
+        for d in ("out", "in"):
+            assert led.reserved(p, d) == pytest.approx(0.0, abs=1e-6)
+            assert led.available(p, d) == pytest.approx(
+                fabric.direction_capacity(p, d), rel=1e-9, abs=1e-6)
+
+
+def test_ledger_strict_overcommit_raises():
+    fabric = Fabric.of(Path("p", 100.0))
+    led = fabric.ledger()
+    led.reserve("p", out=80.0)
+    with pytest.raises(InsufficientBudget):
+        led.reserve("p", out=30.0)
+    assert led.reserved("p", "out") == pytest.approx(80.0)   # unchanged
+    assert led.reserve("p", out=30.0, strict=False) is False
+    led.reserve("p", out=20.0)                               # exact fill OK
+
+
+def test_ledger_release_more_than_held_raises():
+    fabric = Fabric.of(Path("p", 100.0))
+    led = fabric.ledger()
+    led.reserve("p", out=10.0, flow="a")
+    with pytest.raises(InsufficientBudget):
+        led.release("p", out=20.0, flow="a")
+    with pytest.raises(InsufficientBudget):
+        led.release("p", out=5.0, flow="b")   # b holds nothing
+
+
+def test_ledger_checkpoint_restore_roundtrip():
+    fabric = Fabric.of(Path("a", 10.0), Path("b", 20.0, bidirectional=False))
+    led = fabric.ledger()
+    led.reserve("a", out=3.0, in_=2.0, flow="x")
+    token = led.checkpoint()
+    led.reserve("a", out=4.0, flow="y")
+    led.reserve("b", out=11.0, flow="y")
+    led.restore(token)
+    assert led.reserved("a", "out") == pytest.approx(3.0)
+    assert led.reserved("a", "in") == pytest.approx(2.0)
+    assert led.reserved("b", "out") == pytest.approx(0.0)
+    assert led.holders("a") == {"x"}
+
+
+def test_unidirectional_path_has_no_in_budget():
+    fabric = Fabric.of(Path("one", 50.0, bidirectional=False))
+    led = fabric.ledger()
+    assert led.available("one", "in") == 0.0
+    with pytest.raises(InsufficientBudget):
+        led.reserve("one", in_=1.0)
+
+
+def test_concurrency_discount_applied_once_in_ledger():
+    """§4.1: a second distinct flow on the same group cuts the
+    effective capacity once — not per call site, not per use."""
+    fabric = Fabric.of(Path("p", 100.0), concurrency_discount=0.125)
+    led = fabric.ledger()
+    assert led.effective_capacity("p", "out") == pytest.approx(100.0)
+    led.reserve("p", out=10.0, flow="a")
+    # a alone: still undiscounted
+    assert led.effective_capacity("p", "out") == pytest.approx(100.0)
+    # b joining discounts the path (and would-be availability reflects it)
+    assert led.effective_capacity("p", "out", joining="b") == pytest.approx(87.5)
+    assert led.available("p", "out", joining="b") == pytest.approx(77.5)
+    led.reserve("p", out=5.0, flow="b")
+    assert led.effective_capacity("p", "out") == pytest.approx(87.5)
+
+
+# ----------------------------------------------------------------------
+# router: the §5.1 LineFS numbers through the first-class API
+# ----------------------------------------------------------------------
+
+def test_router_linefs_a1_peak_matches_paper():
+    """Paper §5.1: without compression A1 peaks at 128 Gbps."""
+    fabric = linefs_fabric(N, P)
+    a1 = linefs_replication_alternatives(N, P, ratio=1.0)[0]
+    assert abs(a1.solo_rate(fabric) * 8 / 1e9 - 128) < 1
+
+
+def test_router_greedy_combine_exceeds_solo():
+    """A2 (SoC-capped) + A3 fills the leftover network (Fig 15)."""
+    fabric = linefs_fabric(N, P)
+    alts = linefs_replication_alternatives(N, P, ratio=0.5, soc_rate=12e9)
+    router = fabric.router()
+    allocs, total = router.allocate([alts[1], alts[2]])
+    assert total > alts[1].solo_rate(fabric)
+    assert total > 0.9 * alts[2].solo_rate(fabric)
+    assert allocs[0].bottleneck == "compute"
+    assert allocs[1].bottleneck.startswith("net")
+
+
+def test_router_bidirectional_multiplexing():
+    """Fig 5: opposite-direction flows reach ~2x one-way; same-direction
+    flows split one budget; double-crossing eats both directions."""
+    fabric = linefs_fabric(N, P)
+    router = fabric.router()
+    read = Alternative("read", uses=[Use("net", out=1)])
+    write = Alternative("write", uses=[Use("net", in_=1)])
+    _, total = router.allocate([read, write])
+    assert total == pytest.approx(2 * N, rel=1e-6)
+    read2 = Alternative("read2", uses=[Use("net", out=1)])
+    _, total_same = router.allocate([read, read2])
+    assert total_same == pytest.approx(N, rel=1e-6)
+    relay = Alternative("relay", uses=[Use("internal", out=1, in_=1)])
+    other = Alternative("other", uses=[Use("internal", out=1)])
+    _, solo = router.allocate([relay])
+    allocs, both = router.allocate([relay, other])
+    assert solo == pytest.approx(P, rel=1e-6)
+    assert both == solo and allocs[1].rate == 0.0
+
+
+def test_router_slack_rule():
+    """B_slow <= P - N after the primary saturates the network."""
+    fabric = linefs_fabric(N, P)
+    primary = Alternative("primary", uses=[Use("net", out=1),
+                                           Use("internal", out=1)])
+    assert fabric.router().slack(primary, "internal") == \
+        pytest.approx(P - N, rel=1e-6)
+
+
+def test_allocate_aggregates_duplicate_uses():
+    """Two Uses of one (path, direction) add up — the admissible rate
+    halves instead of the strict reserve blowing up."""
+    fabric = Fabric.of(Path("net", 100.0))
+    dup = Alternative("dup", uses=[Use("net", out=1), Use("net", out=1)])
+    allocs, total = fabric.router().allocate([dup])
+    assert total == pytest.approx(50.0)
+    assert allocs[0].bottleneck == "net:out"
+
+
+def test_reserve_alternative_strict_failure_is_atomic():
+    """A strict reserve that raises mid-alternative must leave the
+    ledger untouched (all uses or none)."""
+    fabric = Fabric.of(Path("a", 100.0), Path("b", 10.0))
+    led = fabric.ledger()
+    alt = Alternative("x", uses=[Use("a", out=1), Use("b", out=1)])
+    with pytest.raises(InsufficientBudget):
+        led.reserve_alternative(alt, 50.0)     # b only sustains 10
+    assert led.reserved("a", "out") == 0.0
+    assert led.reserved("b", "out") == 0.0
+
+
+def test_plan_decode_placement_uses_given_costs():
+    """The plan must be computed with the caller's calibration, not the
+    defaults (use coefficients like mixed_nic_efficiency come from
+    PathCosts, not from the fabric)."""
+    from repro.serve.disagg import (PathCosts, kv_fabric,
+                                    plan_decode_placement)
+    costs = PathCosts(mixed_nic_efficiency=0.3)
+    plan = plan_decode_placement(kv_fabric(costs), hit_mass=0.7, costs=costs)
+    default = plan_decode_placement(kv_fabric(), hit_mass=0.7)
+    assert plan.rate < default.rate            # harsher mixing penalty
+
+
+def test_router_demand_cap_and_ledger_threading():
+    """Routing against a pre-loaded ledger sees only the leftovers."""
+    fabric = linefs_fabric(N, P)
+    led = fabric.ledger()
+    led.reserve("net", out=N / 2, flow="background")
+    router = fabric.router()
+    a3 = linefs_replication_alternatives(N, P, ratio=1.0)[2]
+    _, total = router.allocate([a3], ledger=led)
+    assert total == pytest.approx(N / 2, rel=1e-6)
+    # demand below capacity stops early
+    _, got = router.allocate([a3], demand=1e9)
+    assert got == pytest.approx(1e9)
+
+
+# ----------------------------------------------------------------------
+# router: the §5.2 DrTM-KV numbers (ops/s units + blend)
+# ----------------------------------------------------------------------
+
+def test_kv_fabric_is_ops_units_and_validates():
+    from repro.serve.disagg import kv_alternatives, kv_fabric
+    fabric = kv_fabric()
+    assert all(p.units == OPS_PER_S for p in fabric.values())
+    for alt in kv_alternatives().values():
+        fabric.validate(alt)    # declared units match
+    bad = Alternative("bad", uses=[Use("host_read", out=1, units=BYTES_PER_S)])
+    with pytest.raises(FabricError):
+        fabric.validate(bad)
+    unknown = Alternative("u", uses=[Use("nope", out=1)])
+    with pytest.raises(FabricError):
+        fabric.validate(unknown)
+
+
+def test_blend_reproduces_combined_a4_a5():
+    """§5.2 / Fig 18: the router blend matches the calibrated paper
+    numbers and the DisaggKV entry point is the same computation."""
+    from repro.serve.disagg import DisaggKV, KVStoreParams, MultipathRouter
+    kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
+    total, allocs = kv.combined_a4_a5()
+    assert abs(total / 1e6 - 68) < 4
+    assert sum(a.rate for a in allocs) == pytest.approx(total)
+    m = kv.cache_hit_mass()
+    alts = kv.alternatives()
+    direct, _ = MultipathRouter(kv.fabric()).blend(
+        [(alts["A5"], m), (alts["A4"], 1 - m)])
+    assert direct == pytest.approx(total)
+    # discount applied once: disabling it must raise the blended rate
+    from repro.serve.disagg import PathCosts
+    kv2 = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000),
+                   costs=PathCosts(concurrency_discount=0.0))
+    total2, _ = kv2.combined_a4_a5()
+    assert total2 > total
+
+
+def test_plan_decode_placement_prefers_soc_cache():
+    from repro.serve.disagg import plan_decode_placement, kv_fabric
+    plan = plan_decode_placement(kv_fabric(), hit_mass=0.7)
+    assert plan.location == "soc_cache"
+    assert plan.rate > plan.baseline_rate
+    # with a cold cache the host path wins
+    cold = plan_decode_placement(kv_fabric(), hit_mass=0.0)
+    assert cold.location == "host"
+    assert cold.rate == pytest.approx(cold.baseline_rate)
+
+
+# ----------------------------------------------------------------------
+# TPU fabric construction
+# ----------------------------------------------------------------------
+
+def test_enumerate_paths_returns_fabric():
+    fabric = enumerate_paths({"pod": 2, "data": 16, "model": 16})
+    assert isinstance(fabric, Fabric)
+    assert set(fabric) == {"dcn:pod", "ici:data", "ici:model", "pcie:host"}
+    assert fabric["ici:data"].axis == "data"
+    assert fabric["dcn:pod"].kind == "dcn"
+    # mapping protocol: dict-style consumers keep working
+    assert "pcie:host" in fabric and len(fabric) == 4
+    assert fabric["pcie:host"].bw == fabric["pcie:host"].capacity
+
+
+def test_fabric_rejects_duplicates_and_bad_units():
+    with pytest.raises(FabricError):
+        Fabric.of(Path("x", 1.0), Path("x", 2.0))
+    with pytest.raises(FabricError):
+        Path("y", 1.0, units="widgets/s")
+    with pytest.raises(FabricError):
+        Path("z", 0.0)

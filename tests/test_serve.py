@@ -59,6 +59,43 @@ def test_engine_mixed_lengths(small_lm):
         assert r.done and len(r.out_tokens) == new
 
 
+def test_engine_run_returns_completed_requests(small_lm):
+    """Regression: run() used to always return [] — it must hand back
+    every request retired during the call, in retirement order."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, impl="ref")
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert all(r.done for r in done)
+    # a second run with nothing queued completes nothing new
+    assert eng.run() == []
+    # late submissions are returned by the call that retires them
+    late = Request(rid=99, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                   max_new_tokens=2)
+    eng.submit(late)
+    assert [r.rid for r in eng.run()] == [99]
+
+
+def test_engine_fabric_placement(small_lm):
+    """§5.2 wired into serving: the engine consults the fabric router
+    for the decode cache placement."""
+    cfg, params = small_lm
+    kv = DisaggKV(KVStoreParams(n_keys=10_000, soc_cache_keys=1_000))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, impl="ref",
+                      fabric=kv.fabric(), cache_hit_mass=kv.cache_hit_mass())
+    assert eng.placement is not None
+    assert eng.placement.location == "soc_cache"
+    assert eng.placement.rate > eng.placement.baseline_rate
+    # without a fabric there is no placement plan
+    eng2 = ServeEngine(cfg, params, slots=2, max_len=64, impl="ref")
+    assert eng2.placement is None
+
+
 def test_disagg_data_plane_correct():
     kv = DisaggKV(KVStoreParams(n_keys=5000, soc_cache_keys=500))
     rng = np.random.default_rng(0)

@@ -11,7 +11,8 @@ import traceback
 
 from benchmarks import (bench_bidirectional, bench_bucketing, bench_concurrent,
                         bench_granularity, bench_kernels, bench_kvserve,
-                        bench_paths, bench_replication, bench_skew, roofline)
+                        bench_paths, bench_replication, bench_runtime,
+                        bench_skew, roofline)
 from benchmarks import common
 
 SECTIONS = [
@@ -21,8 +22,9 @@ SECTIONS = [
     ("granularity (Fig 8/9)", bench_granularity.main),
     ("bucketing (Fig 10)", bench_bucketing.main),
     ("concurrent (Fig 12/§4.1)", bench_concurrent.main),
+    ("runtime (event-driven fabric)", bench_runtime.main),
     ("replication (Fig 13/15, LineFS §5.1)", bench_replication.main),
-    ("kv-serve (Fig 17/18, DrTM-KV §5.2)", bench_kvserve.main),
+    ("kvserve (Fig 17/18, DrTM-KV §5.2)", bench_kvserve.main),
     ("kernels", bench_kernels.main),
     ("roofline (§Roofline)", roofline.main),
 ]
@@ -33,15 +35,16 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="write rows as a JSON list of records")
     ap.add_argument("--only", default=None,
-                    help="substring filter on section names")
+                    help="comma-separated substring filters on section names")
     args = ap.parse_args(argv)
+    only = [t for t in (args.only or "").split(",") if t]
     if args.json:                      # fail fast, not after minutes of work
         open(args.json, "w").close()
 
     failures = []
     records = []
     for name, fn in SECTIONS:
-        if args.only and args.only not in name:
+        if only and not any(t in name for t in only):
             continue
         print(f"\n==== {name} ====")
         common.RESULTS.clear()

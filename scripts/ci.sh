@@ -1,11 +1,47 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies.
-#   scripts/ci.sh            # run tests
-#   scripts/ci.sh --bench    # also run the benchmark driver with JSON output
+# Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
+# plus the runtime/kvserve benchmark sections with schema-validated
+# JSON output (BENCH_3.json — the PR-3 perf trajectory record).
+#   scripts/ci.sh            # tests + runtime,kvserve benches
+#   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_3.json --only runtime,kvserve
+
+# fail on schema-invalid benchmark output
+PYTHONPATH=src python - <<'EOF'
+import json, numbers, sys
+
+with open("BENCH_3.json") as f:
+    doc = json.load(f)
+problems = []
+if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
+    problems.append(f"top level must be {{rows, failures}}, got {type(doc)}")
+else:
+    if doc["failures"]:
+        problems.append(f"failed sections: {doc['failures']}")
+    if not doc["rows"]:
+        problems.append("no benchmark rows recorded")
+    for i, r in enumerate(doc.get("rows", [])):
+        if not isinstance(r, dict) or \
+                not {"section", "name", "us", "derived"} <= set(r):
+            problems.append(f"row {i} missing keys: {r}")
+        elif not (isinstance(r["name"], str) and isinstance(r["section"], str)
+                  and isinstance(r["us"], numbers.Real)
+                  and isinstance(r["derived"], str)):
+            problems.append(f"row {i} has wrong types: {r}")
+    names = {r.get("name") for r in doc.get("rows", [])}
+    for required in ("runtime/replication_pipelined", "runtime/serve_staged_ttft",
+                     "fig18/staged_engine_ttft"):
+        if required not in names:
+            problems.append(f"required row {required!r} missing")
+if problems:
+    sys.exit("BENCH_3.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_3.json OK ({len(doc['rows'])} rows)")
+EOF
 
 if [[ "${1:-}" == "--bench" ]]; then
     PYTHONPATH=src:. python benchmarks/run.py --json "BENCH_$(date +%Y%m%d).json"

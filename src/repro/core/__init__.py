@@ -1,12 +1,14 @@
 """core: the paper's contribution — a unified multi-path fabric,
-routing/planning and collectives for TPU meshes."""
+an event-driven runtime, routing/planning and collectives for TPU
+meshes."""
 from repro.core import hw
 from repro.core.fabric import (Allocation, Alternative, BudgetLedger,
                                Fabric, MultipathRouter, Path, Use,
                                BYTES_PER_S, OPS_PER_S)
+from repro.core.runtime import (Event, FabricRuntime, Process, Signal,
+                                SimClock, Transfer)
 from repro.core.paths import PathSpec, enumerate_paths, collective_bytes_per_chip
-from repro.core.planner import PathPlanner, PathUse
-from repro.core.charz import parse_collectives, summarize_traffic
+from repro.core.charz import parse_collectives, replay, summarize_traffic
 from repro.core.roofline import RooflineReport, build_report, model_flops_for
 
 __all__ = [
@@ -14,10 +16,10 @@ __all__ = [
     # fabric API (canonical)
     "Fabric", "Path", "Use", "Alternative", "Allocation",
     "BudgetLedger", "MultipathRouter", "BYTES_PER_S", "OPS_PER_S",
+    # event-driven runtime
+    "SimClock", "Event", "Signal", "Transfer", "Process", "FabricRuntime",
     # TPU fabric + traffic model
     "PathSpec", "enumerate_paths", "collective_bytes_per_chip",
-    # deprecated shims
-    "PathPlanner", "PathUse",
-    "parse_collectives", "summarize_traffic",
+    "parse_collectives", "summarize_traffic", "replay",
     "RooflineReport", "build_report", "model_flops_for",
 ]

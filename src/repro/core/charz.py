@@ -202,3 +202,30 @@ def summarize_traffic(hlo_text: str,
         counts[op.op] += 1
     return TrafficSummary(per_path=dict(per_path), per_op=dict(per_op),
                           op_counts=dict(counts), ops=ops)
+
+
+def replay(summary: TrafficSummary, fabric, clock=None) -> float:
+    """Execute a TrafficSummary on the event-driven fabric runtime:
+    every path's per-chip bytes become one concurrent transfer, and the
+    simulated step time is when the last of them drains.
+
+    Unlike the static per-path division (`bytes / bw` summed per path in
+    the roofline), overlap and the §4.1 concurrency discount are
+    *emergent*: paths in one ``shared_group`` (e.g. all ICI axes)
+    interfere, independent groups (ICI vs DCN vs PCIe) overlap freely.
+    Path names not present in `fabric` (e.g. the "ici:?" attribution
+    fallback) are skipped. Returns simulated seconds; 0.0 for an empty
+    summary. Pass a shared ``clock`` to embed the replay in a larger
+    timeline (the elapsed time is still returned)."""
+    from repro.core.runtime import FabricRuntime
+    rt = FabricRuntime(fabric, clock=clock)
+    t0 = rt.clock.now
+    transfers = [rt.transfer(name, summary.per_path[name],
+                             flow=f"replay:{name}")
+                 for name in sorted(summary.per_path)
+                 if summary.per_path[name] > 0 and name in fabric]
+    if not transfers:
+        return 0.0
+    # stop at our own completion: a shared clock's later events stay put
+    rt.clock.run(stop=lambda: all(t.done for t in transfers))
+    return rt.clock.now - t0

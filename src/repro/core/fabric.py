@@ -204,16 +204,23 @@ class Alternative:
     criteria: Dict[str, float] = field(default_factory=dict)
     # e.g. {"host_cpu": 0.2, "latency_us": 4.6, "net_utilization": 1.0}
 
-    def solo_rate(self, fabric: Mapping) -> float:
+    def solo_rate(self, fabric: Mapping,
+                  ledger: Optional["BudgetLedger"] = None) -> float:
         """Peak work units/s using this alternative alone (no sharing,
-        no discount — a single flow)."""
+        no discount — a single flow). With a ``ledger``, the rate is
+        computed against the *remaining* budgets (live occupancy,
+        discount included via the ledger's holder count)."""
         rate = self.compute_rate
         for u in self.uses:
-            cap = fabric[u.path].capacity
+            if ledger is not None:
+                cap_out = ledger.available(u.path, OUT, joining=self.name)
+                cap_in = ledger.available(u.path, IN, joining=self.name)
+            else:
+                cap_out = cap_in = fabric[u.path].capacity
             if u.out > 0:
-                rate = min(rate, cap / u.out)
+                rate = min(rate, cap_out / u.out)
             if u.in_ > 0:
-                rate = min(rate, cap / u.in_)
+                rate = min(rate, cap_in / u.in_)
         return rate
 
 
@@ -434,12 +441,17 @@ class MultipathRouter:
 
     # -- fixed-ratio mixing (DrTM-KV A4+A5) ----------------------------
     def blend(self, weighted: Sequence[Tuple[Alternative, float]],
+              *, ledger: Optional[BudgetLedger] = None,
               ) -> Tuple[float, List[Allocation]]:
         """Scale a fixed mix of alternatives (weights = fraction of work
         each serves, e.g. cache hit/miss masses) up to the first
         saturated resource. The §4.1 discount applies to every path
         whose interference group is touched by more than one member of
-        the mix. Returns (total work units/s, per-member allocations)."""
+        the mix. With a ``ledger``, the mix is scaled against the
+        *remaining* budgets: live holders count toward the discount and
+        their reservations shrink the capacity — so re-planning under
+        load sees the fabric as it is, not as it was at startup.
+        Returns (total work units/s, per-member allocations)."""
         usage: Dict[Tuple[str, str], float] = {}
         touchers: Dict[str, Set[str]] = {}
         total = math.inf
@@ -461,8 +473,13 @@ class MultipathRouter:
             if amt <= 0:
                 continue
             cap = self.fabric.direction_capacity(name, direction)
-            if len(touchers[self.fabric[name].group]) > 1:
+            mixers: Set[str] = set(touchers[self.fabric[name].group])
+            if ledger is not None:
+                mixers |= ledger.holders(name)
+            if len(mixers) > 1:
                 cap *= 1.0 - self.fabric.concurrency_discount
+            if ledger is not None:
+                cap = max(0.0, cap - ledger.reserved(name, direction))
             r = cap / amt
             if r < total:
                 total, bottleneck = r, f"{name}:{direction}"

@@ -1,0 +1,389 @@
+"""Event-driven fabric runtime: simulated-time transfers over the Fabric.
+
+PR 1 made the path model *static*: ``MultipathRouter.blend`` returns a
+closed-form rate and every consumer asks "what is the steady-state
+bandwidth?" once. The paper's wins, however, are *temporal* — a
+transfer on one path overlapping compute, or a transfer on another
+path, under load. This module is the discrete-event timeline that
+captures exactly that:
+
+``SimClock``      a monotonically-advancing simulated clock with an
+                  event heap (``schedule``/``at``/``cancel``/``run``).
+``Transfer``      an in-flight amount (path units) on one ``Path``
+                  direction. It reserves its *current rate* in the
+                  ``BudgetLedger`` and occupies the path for
+                  ``amount / effective_rate`` simulated seconds.
+                  Concurrent transfers on a path (or on a path in the
+                  same ``shared_group``) fair-share the capacity, and
+                  the §4.1 concurrency discount *emerges* — two
+                  overlapping flows each see
+                  ``capacity * (1 - discount) / 2``, not a constant
+                  factor applied by a call site.
+``Process``       a generator-driven coroutine. Yield a ``Transfer``
+                  (resume on completion), a number (resume after that
+                  many simulated seconds), a ``Signal`` (resume when
+                  fired) or another ``Process`` (resume when it
+                  returns). Completion callbacks and Processes are how
+                  dependent work is driven.
+``FabricRuntime`` ties a ``Fabric`` + ``BudgetLedger`` + ``SimClock``
+                  together and owns rate rebalancing.
+
+Rebalancing model: whenever a transfer joins or leaves an interference
+group, every member's progress is settled at its old rate, the group's
+per-direction capacity (discounted iff more than one distinct flow is
+active on the group, counting non-transfer ledger holders) is split
+evenly among the members on each (path, direction), and completion
+events are rescheduled. Path ``latency`` is served as a pure delay
+before the transfer starts occupying capacity. External ledger
+reservations (e.g. a primary functionality's pre-reserved traffic) are
+respected: transfers only share what the ledger has left.
+
+Conservation: every reservation a transfer makes is released when it
+finishes, so after a quiescent run the ledger is back to its external
+reservations only — asserted in tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from typing import (Any, Callable, Dict, Generator, List, Optional, Tuple)
+
+from repro.core.fabric import (BudgetLedger, Fabric, FabricError, IN, OUT)
+
+
+class Event:
+    """One scheduled callback. Cancel via ``SimClock.cancel``."""
+    __slots__ = ("time", "seq", "fn", "args", "canceled")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
+        self.time, self.seq, self.fn, self.args = time, seq, fn, args
+        self.canceled = False
+
+    def __repr__(self) -> str:
+        return f"Event(t={self.time:.6g}, fn={getattr(self.fn, '__name__', self.fn)})"
+
+
+class SimClock:
+    """Discrete-event clock. Deterministic: ties break by schedule order."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = itertools.count()
+
+    def schedule(self, delay: float, fn: Callable, *args) -> Event:
+        """Schedule ``fn(*args)`` ``delay`` simulated seconds from now."""
+        return self.at(self.now + delay, fn, *args)
+
+    def at(self, time: float, fn: Callable, *args) -> Event:
+        if time < self.now - 1e-12:
+            raise ValueError(f"cannot schedule in the past ({time} < {self.now})")
+        ev = Event(max(time, self.now), next(self._seq), fn, args)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def cancel(self, ev: Optional[Event]) -> None:
+        if ev is not None:
+            ev.canceled = True
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for _, _, e in self._heap if not e.canceled)
+
+    def run(self, until: Optional[float] = None,
+            stop: Optional[Callable[[], bool]] = None) -> float:
+        """Process events in time order until the heap drains, ``until``
+        is reached, or ``stop()`` returns True (checked after each
+        event). With ``until``, the clock always lands on it (even when
+        the heap drains early) unless ``stop`` fired first. Returns the
+        clock time."""
+        stopped = False
+        while self._heap:
+            time, _, ev = self._heap[0]
+            if until is not None and time > until:
+                break
+            heapq.heappop(self._heap)
+            if ev.canceled:
+                continue
+            self.now = time
+            ev.fn(*ev.args)
+            if stop is not None and stop():
+                stopped = True
+                break
+        if until is not None and not stopped and self.now < until:
+            self.now = until
+        return self.now
+
+
+class Signal:
+    """A broadcast condition: processes wait on it, someone fires it.
+    Firing wakes every current waiter at the current simulated time."""
+
+    def __init__(self, clock: SimClock):
+        self.clock = clock
+        self._waiters: List[Callable[[Any], None]] = []
+
+    def wait(self, fn: Callable[[Any], None]) -> None:
+        self._waiters.append(fn)
+
+    def fire(self, value: Any = None) -> None:
+        waiters, self._waiters = self._waiters, []
+        for w in waiters:
+            self.clock.schedule(0.0, w, value)
+
+
+class Transfer:
+    """An in-flight amount on one path direction.
+
+    ``rate`` is the current fair share (path units/s); it changes as
+    transfers join/leave the interference group. ``max_rate`` caps the
+    share (a slow endpoint); the surplus is water-filled back to the
+    uncapped flows. ``done`` flips exactly once; callbacks added after
+    completion run immediately (same simulated time)."""
+    _ids = itertools.count()
+
+    def __init__(self, runtime: "FabricRuntime", path: str, amount: float,
+                 *, direction: str = OUT, flow: Optional[str] = None,
+                 max_rate: float = math.inf):
+        if amount <= 0:
+            raise FabricError("transfer amount must be > 0")
+        if direction not in (OUT, IN):
+            raise FabricError(f"unknown direction {direction!r}")
+        self.runtime = runtime
+        self.path = path
+        self.direction = direction
+        self.amount = float(amount)
+        self.remaining = float(amount)
+        self.flow = flow if flow is not None else f"xfer-{next(self._ids)}"
+        self.max_rate = max_rate
+        self.rate = 0.0
+        self.created_at = runtime.clock.now
+        self.started_at: Optional[float] = None   # after the latency phase
+        self.finished_at: Optional[float] = None
+        self.done = False
+        self._last_update = runtime.clock.now
+        self._event: Optional[Event] = None        # pending completion
+        self._res = 0.0                            # currently reserved rate
+        self._callbacks: List[Callable[["Transfer"], None]] = []
+
+    # -- observability --------------------------------------------------
+    @property
+    def elapsed(self) -> float:
+        end = self.finished_at if self.done else self.runtime.clock.now
+        return end - self.created_at
+
+    def add_callback(self, fn: Callable[["Transfer"], None]) -> None:
+        if self.done:
+            self.runtime.clock.schedule(0.0, fn, self)
+        else:
+            self._callbacks.append(fn)
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else f"{self.remaining:.3g} left @ {self.rate:.3g}/s"
+        return f"Transfer({self.path}:{self.direction}, {self.amount:.3g}, {state})"
+
+
+class Process:
+    """Generator-driven coroutine on a runtime (see module docstring for
+    the yield protocol). ``result`` is the generator's return value."""
+
+    def __init__(self, runtime: "FabricRuntime",
+                 gen: Generator[Any, Any, Any], name: str = "proc"):
+        self.runtime = runtime
+        self.gen = gen
+        self.name = name
+        self.done = False
+        self.result: Any = None
+        self._waiters: List[Callable[[Any], None]] = []
+        runtime.clock.schedule(0.0, self._advance, None)
+
+    def _advance(self, send_value: Any) -> None:
+        if self.done:
+            return
+        try:
+            item = self.gen.send(send_value)
+        except StopIteration as e:
+            self.done = True
+            self.result = e.value
+            waiters, self._waiters = self._waiters, []
+            for w in waiters:
+                self.runtime.clock.schedule(0.0, w, self.result)
+            return
+        self._wait_on(item)
+
+    def _wait_on(self, item: Any) -> None:
+        clock = self.runtime.clock
+        if isinstance(item, Transfer):
+            item.add_callback(lambda t: self._advance(t))
+        elif isinstance(item, Process):
+            if item.done:
+                clock.schedule(0.0, self._advance, item.result)
+            else:
+                item._waiters.append(self._advance)
+        elif isinstance(item, Signal):
+            item.wait(self._advance)
+        elif isinstance(item, (int, float)):
+            if item < 0:
+                raise ValueError(f"process {self.name}: negative delay {item}")
+            clock.schedule(float(item), self._advance, None)
+        else:
+            raise TypeError(
+                f"process {self.name} yielded {type(item).__name__}; expected "
+                "Transfer, Process, Signal, or a delay in seconds")
+
+    def __repr__(self) -> str:
+        return f"Process({self.name}, {'done' if self.done else 'running'})"
+
+
+class FabricRuntime:
+    """A Fabric executing in simulated time.
+
+    Owns a ``SimClock`` and a ``BudgetLedger``; ``transfer()`` starts a
+    flow, ``process()`` spawns a coroutine, ``signal()`` makes a wait
+    condition. The ledger may carry external (non-transfer)
+    reservations — transfers share only the remaining budget, and an
+    external holder counts toward the §4.1 discount.
+    """
+
+    def __init__(self, fabric: Fabric, *, clock: Optional[SimClock] = None,
+                 ledger: Optional[BudgetLedger] = None):
+        self.fabric = fabric
+        self.clock = clock if clock is not None else SimClock()
+        self.ledger = ledger if ledger is not None else fabric.ledger()
+        # interference group -> active (capacity-holding) transfers
+        self._active: Dict[str, List[Transfer]] = {}
+
+    # -- API ------------------------------------------------------------
+    def transfer(self, path: str, amount: float, *, direction: str = OUT,
+                 flow: Optional[str] = None, max_rate: float = math.inf,
+                 delay: float = 0.0,
+                 on_complete: Optional[Callable[[Transfer], None]] = None,
+                 ) -> Transfer:
+        """Start moving ``amount`` (path units) over ``path``. The
+        path's ``latency`` (plus ``delay``) is served first without
+        holding capacity; then the transfer joins the fair-share pool.
+        """
+        if path not in self.fabric:
+            raise FabricError(f"unknown path {path!r} "
+                              f"(fabric has {sorted(self.fabric)})")
+        p = self.fabric[path]
+        if direction == IN and not p.bidirectional:
+            raise FabricError(f"path {path} has no {IN} budget")
+        t = Transfer(self, path, amount, direction=direction, flow=flow,
+                     max_rate=max_rate)
+        if on_complete is not None:
+            t.add_callback(on_complete)
+        lead = delay + p.latency
+        if lead > 0:
+            self.clock.schedule(lead, self._begin, t)
+        else:
+            self._begin(t)
+        return t
+
+    def process(self, gen: Generator, name: str = "proc") -> Process:
+        return Process(self, gen, name=name)
+
+    def signal(self) -> Signal:
+        return Signal(self.clock)
+
+    def active_transfers(self, path: Optional[str] = None) -> List[Transfer]:
+        if path is None:
+            return [t for ts in self._active.values() for t in ts]
+        group = self.fabric[path].group
+        return [t for t in self._active.get(group, []) if t.path == path]
+
+    def rebalance(self, path: Optional[str] = None) -> None:
+        """Re-split capacity after an *external* ledger change (e.g. a
+        primary functionality released its reservation). Transfer
+        completions rebalance automatically; the ledger has no way to
+        notify the runtime about non-transfer releases, so a transfer
+        stalled behind an external reservation stays at rate 0 until
+        this is called for its path (or for all groups, with no
+        argument)."""
+        if path is not None:
+            self._rebalance(self.fabric[path].group)
+        else:
+            for group in list(self._active):
+                self._rebalance(group)
+
+    # -- mechanics ------------------------------------------------------
+    def _begin(self, t: Transfer) -> None:
+        t.started_at = self.clock.now
+        t._last_update = self.clock.now
+        group = self.fabric[t.path].group
+        self._active.setdefault(group, []).append(t)
+        self._rebalance(group)
+
+    def _complete(self, t: Transfer) -> None:
+        if t.done:
+            return
+        group = self.fabric[t.path].group
+        t.remaining = 0.0
+        t.done = True
+        t.finished_at = self.clock.now
+        self.clock.cancel(t._event)
+        t._event = None
+        self._release(t)
+        self._active[group].remove(t)
+        callbacks, t._callbacks = t._callbacks, []
+        for fn in callbacks:
+            fn(t)
+        self._rebalance(group)
+
+    def _release(self, t: Transfer) -> None:
+        if t._res > 0:
+            kw = {"out": t._res} if t.direction == OUT else {"in_": t._res}
+            self.ledger.release(t.path, flow=t.flow, **kw)
+            t._res = 0.0
+
+    def _rebalance(self, group: str) -> None:
+        """Settle progress, recompute fair shares, reschedule completions
+        for every active transfer in ``group``."""
+        members = self._active.get(group, [])
+        now = self.clock.now
+        # 1. settle at the old rates, return reservations to the ledger
+        for t in members:
+            dt = now - t._last_update
+            if dt > 0 and t.rate > 0:
+                t.remaining = max(0.0, t.remaining - t.rate * dt)
+            t._last_update = now
+            self._release(t)
+        if not members:
+            return
+        # 2. the discount is emergent: it applies iff the final holder
+        # set of the group (transfers + external ledger flows) has more
+        # than one member.
+        external = self.ledger.holders(members[0].path)
+        flows = external | {t.flow for t in members}
+        discounted = (len(flows) > 1
+                      and self.fabric.concurrency_discount > 0.0)
+        buckets: Dict[Tuple[str, str], List[Transfer]] = {}
+        for t in members:
+            buckets.setdefault((t.path, t.direction), []).append(t)
+        # 3. max-min fair split of what the ledger has left, per (path,
+        # direction): a max_rate-capped flow's surplus is water-filled
+        # back to the uncapped flows
+        for (path, direction), ts in buckets.items():
+            cap = self.fabric.direction_capacity(path, direction)
+            if discounted:
+                cap *= 1.0 - self.fabric.concurrency_discount
+            avail = max(0.0, cap - self.ledger.reserved(path, direction))
+            remaining_n = len(ts)
+            for t in sorted(ts, key=lambda t: t.max_rate):
+                t.rate = max(0.0, min(avail / remaining_n, t.max_rate))
+                avail -= t.rate
+                remaining_n -= 1
+            for t in ts:
+                if t.rate > 0:
+                    kw = {"out": t.rate} if direction == OUT else {"in_": t.rate}
+                    self.ledger.reserve(path, flow=t.flow, **kw)
+                    t._res = t.rate
+                self.clock.cancel(t._event)
+                if t.remaining <= 1e-12:
+                    t._event = self.clock.schedule(0.0, self._complete, t)
+                elif t.rate > 0:
+                    t._event = self.clock.schedule(t.remaining / t.rate,
+                                                   self._complete, t)
+                else:
+                    t._event = None        # stalled until capacity frees up

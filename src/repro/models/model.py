@@ -375,9 +375,18 @@ def decode_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
 
 def prefill(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
             max_len: int, *, frontend_embeds=None, impl: str = "auto",
-            cache_dtype=jnp.bfloat16, unroll: int = 1):
+            cache_dtype=jnp.bfloat16, unroll: int = 1,
+            length: Optional[jax.Array] = None):
     """Run the full prompt, building a cache for subsequent decode.
-    Returns (last_hidden (B,1,D) logits, cache, next_pos)."""
+    Returns (last_hidden (B,1,D) logits, cache, next_pos).
+
+    ``length`` (a traced scalar) supports right-padded prompts (the
+    serving engine's power-of-two length buckets): logits come from the
+    token at ``length - 1`` and ``next_pos`` is ``length``. Causal
+    attention makes the pad tail inert for the real tokens, and decode
+    masks cache rows ``>= pos``, so the pad K/V are never read. (SSM
+    configs must pass exact-length prompts — recurrent state runs
+    through every position.)"""
     x = embed_tokens(cfg, params, tokens, frontend_embeds)
     b, s, _ = x.shape
     positions = jnp.arange(s)
@@ -451,5 +460,11 @@ def prefill(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
 
     x, cache = jax.lax.scan(group_body, x, params["layers"], unroll=unroll)
     x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
-    logits = logits_for(cfg, params, x[:, -1:])
-    return logits, cache, jnp.asarray(s, jnp.int32)
+    if length is None:
+        x_last = x[:, -1:]
+        npos = jnp.asarray(s, jnp.int32)
+    else:
+        npos = jnp.asarray(length, jnp.int32)
+        x_last = jax.lax.dynamic_slice_in_dim(x, npos - 1, 1, axis=1)
+    logits = logits_for(cfg, params, x_last)
+    return logits, cache, npos

@@ -1,4 +1,5 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (Request, ServeEngine, ServeTimeModel,
+                                StagedServeEngine)
 from repro.serve.disagg import (DisaggKV, KVStoreParams, PathCosts,
                                 PlacementPlan, kv_alternatives, kv_fabric,
-                                plan_decode_placement)
+                                kv_serve_time_model, plan_decode_placement)

@@ -72,6 +72,20 @@ def kv_fabric(costs: PathCosts = PathCosts()) -> Fabric:
     )
 
 
+def kv_serve_time_model(units_per_token: float = 1e5):
+    """The §5.2 ``ServeTimeModel`` for serving over ``kv_fabric()``:
+    prefill ships the prompt KV over the ③* DMA path, decode cache
+    reads go to the SoC cache or the host per the placement decision.
+    One calibration, shared by the bench (fig18/staged_engine_ttft) and
+    the --staged launcher so they cannot drift apart."""
+    from repro.serve.engine import ServeTimeModel
+    return ServeTimeModel(
+        prefill_path="dma", decode_path="host_read",
+        prefill_units_per_token=units_per_token,
+        decode_units_per_slot=units_per_token,
+        placement_paths={"soc_cache": "soc_read", "host": "host_read"})
+
+
 def kv_alternatives(costs: PathCosts = PathCosts(),
                     reads_per_index: float = 1.0) -> Dict[str, Alternative]:
     """The five offload alternatives of Figure 16, declared in ops/s
@@ -117,22 +131,32 @@ class PlacementPlan:
 
 def plan_decode_placement(fabric: Fabric, *, hit_mass: float = 0.7,
                           costs: Optional[PathCosts] = None,
-                          reads_per_index: float = 1.0) -> PlacementPlan:
+                          reads_per_index: float = 1.0,
+                          ledger=None) -> PlacementPlan:
     """Choose where the decode cache lives by routing the §5.2
     alternatives over `fabric`: SoC cache placement (A5 hits + A4
     misses, blended at `hit_mass`) vs the best cache-less alternative
     (A1 host-only or A4 SoC-index). Pass the same `costs` the fabric
     was calibrated with (use coefficients like mixed_nic_efficiency
-    come from it, not from the fabric)."""
+    come from it, not from the fabric).
+
+    With a ``ledger`` (a ``BudgetLedger`` over the same fabric, e.g.
+    the fabric runtime's), the plan is made from *live* occupancy: the
+    current holders count toward the §4.1 discount and their
+    reservations shrink every path budget — so the staged engine's
+    AdmitStage can re-plan per admitted request and flip to the host
+    path once the SoC-side budgets are eaten."""
     alts = kv_alternatives(costs if costs is not None else PathCosts(),
                            reads_per_index)
     router = MultipathRouter(fabric)
     for alt in alts.values():
         fabric.validate(alt)
-    base_alt = max(("A1", "A4"), key=lambda n: alts[n].solo_rate(fabric))
-    base_rate = alts[base_alt].solo_rate(fabric)
+    base_alt = max(("A1", "A4"),
+                   key=lambda n: alts[n].solo_rate(fabric, ledger=ledger))
+    base_rate = alts[base_alt].solo_rate(fabric, ledger=ledger)
     total, allocs = router.blend([(alts["A5"], hit_mass),
-                                  (alts["A4"], 1.0 - hit_mass)])
+                                  (alts["A4"], 1.0 - hit_mass)],
+                                 ledger=ledger)
     if total > base_rate:
         return PlacementPlan("soc_cache", total, base_rate, hit_mass, allocs)
     return PlacementPlan("host", base_rate, base_rate, hit_mass,
@@ -213,10 +237,6 @@ class DisaggKV:
     def fabric(self) -> Fabric:
         """The §5.2 RDMA fabric (see module-level kv_fabric)."""
         return kv_fabric(self.c)
-
-    def paths(self) -> Fabric:
-        """Deprecated alias for fabric() (pre-Fabric name)."""
-        return self.fabric()
 
     def alternatives(self, reads_per_index: float = 1.0) -> Dict[str, Alternative]:
         return kv_alternatives(self.c, reads_per_index)

@@ -1,22 +1,40 @@
-"""Batched serving engine: prefill + continuous-batching decode.
+"""Batched serving: prefill + continuous-batching decode, two runtimes.
 
 Slot model: a fixed decode batch of ``slots``; each slot holds one
-request's cache rows. New requests prefill (per-request, bucketed
-lengths), their cache rows are spliced into the slot cache, and the
-decode step advances every active slot one token with per-row positions.
+request's cache rows. New requests prefill (per-request, power-of-two
+bucketed lengths), their cache rows are spliced into the slot cache, and
+the decode step advances every active slot one token with per-row
+positions.
 
-Multi-path notes (DrTM-KV mapping): the KV cache is the "value store";
-decode's cache read is the hot path the disagg layer places (batch-
-sharded on ICI for decode_32k, sequence-sharded context-parallel for
-long_500k). When a Fabric is supplied, the engine routes the §5.2
-alternatives over it at startup to pick the decode cache placement
-(SoC cache vs host) — see serve/disagg.plan_decode_placement. Sampling
-is greedy or temperature.
+Two engines share the compute core (``_EngineCore``):
+
+``ServeEngine``       the synchronous baseline: ``step()`` = admit (each
+                      prefill runs to completion, blocking everything)
+                      + one decode step. Optionally timestamps its work
+                      on a ``FabricRuntime`` so it is comparable with
+                      the staged engine on the same simulated timeline.
+``StagedServeEngine`` the event-driven pipeline: ``PrefillStage``
+                      prefills queued requests as soon as they arrive
+                      (overlapping transfers fair-share the prefill
+                      path), ``AdmitStage`` splices ready caches into
+                      free slots — re-evaluating the §5.2 decode-cache
+                      placement per admitted request from *live* ledger
+                      occupancy — and ``DecodeStage`` advances active
+                      slots while prefill transfers are still in
+                      flight. Time-to-first-token no longer waits for a
+                      free slot or for other requests' decode steps.
+
+Both engines produce identical output tokens for greedy sampling: each
+decode-batch row is independent (per-row positions + masks), so overlap
+changes *when* a token exists on the simulated clock, never *which*
+token it is. The simulated-time model is ``ServeTimeModel``: real jax
+compute runs eagerly, and its communication cost (prefill KV-cache
+shipment, per-step decode cache reads) is charged as fabric transfers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +42,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.fabric import Fabric
+from repro.core.runtime import FabricRuntime, Signal
 from repro.models import model as M
+from repro.models.params import layer_period, slot_kind
 
 
 @dataclasses.dataclass
@@ -33,16 +53,52 @@ class Request:
     prompt: np.ndarray                  # (S,) or (S, C) token ids
     max_new_tokens: int = 16
     temperature: float = 0.0
+    arrival: float = 0.0                # simulated arrival time (seconds)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    first_token_time: Optional[float] = None   # simulated TTFT timestamp
+    finish_time: Optional[float] = None
+    placement: Optional[str] = None     # decode-cache placement decision
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
 
 
-class ServeEngine:
+@dataclasses.dataclass(frozen=True)
+class ServeTimeModel:
+    """How engine work maps onto fabric transfers (simulated time).
+
+    ``prefill_path`` carries one transfer of
+    ``prompt_len * prefill_units_per_token`` per admitted request (the
+    prefilled KV cache shipping to its decode slot); ``decode_path``
+    carries ``n_active * decode_units_per_slot`` per decode step (the
+    batched cache read). ``placement_paths`` optionally routes a slot's
+    decode traffic by its ``PlacementPlan.location`` (e.g.
+    ``{"soc_cache": "soc_read", "host": "host_read"}``)."""
+    prefill_path: str
+    decode_path: str
+    prefill_units_per_token: float = 1.0
+    decode_units_per_slot: float = 1.0
+    placement_paths: Optional[Dict[str, str]] = None
+
+    def decode_path_for(self, placement: Optional[str]) -> str:
+        if self.placement_paths and placement in self.placement_paths:
+            return self.placement_paths[placement]
+        return self.decode_path
+
+
+class _EngineCore:
+    """Model compute + slot bookkeeping shared by both engines."""
+
+    MIN_BUCKET = 8
+
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  max_len: int = 256, impl: str = "auto",
                  cache_dtype=jnp.float32, seed: int = 0,
-                 fabric: Optional[Fabric] = None,
-                 cache_hit_mass: float = 0.7, placement_costs=None):
+                 bucket_prefill: bool = True):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.impl = slots, max_len, impl
         self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
@@ -51,22 +107,52 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []   # retired, not yet drained by run()
         self.key = jax.random.PRNGKey(seed)
-        self.placement = None
-        if fabric is not None:
-            from repro.serve.disagg import plan_decode_placement
-            self.placement = plan_decode_placement(
-                fabric, hit_mass=cache_hit_mass, costs=placement_costs)
+        # bucketing needs causal attention's inert pad tail; SSM state
+        # runs through every position, so those configs prefill exact.
+        self._attn_only = all(slot_kind(cfg, s)["kind"] == "attn"
+                              for s in range(layer_period(cfg)))
+        self.bucket_prefill = bucket_prefill and self._attn_only
+        self._compiled_buckets: set = set()
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, impl=impl))
         self._prefill = jax.jit(
-            lambda p, t: M.prefill(cfg, p, t, max_len, impl=impl,
-                                   cache_dtype=cache_dtype),
-            static_argnames=())
-        self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
+            lambda p, t, n: M.prefill(cfg, p, t, max_len, impl=impl,
+                                      cache_dtype=cache_dtype, length=n))
+        self.stats: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_steps": 0,
+            "prefill_compilations": 0, "prefill_padded_tokens": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _bucket_len(self, n: int) -> int:
+        """Pad target: next power of two (>= MIN_BUCKET), clamped to the
+        cache length so the padded prefill still fits."""
+        if not self.bucket_prefill:
+            return n
+        bucket = max(self.MIN_BUCKET, 1 << (max(n - 1, 0)).bit_length())
+        return bucket if bucket <= self.max_len else n
+
+    def _prefill_request(self, req: Request) -> Tuple[Any, int]:
+        """Real prefill compute for one request (bucketed): appends the
+        first output token and returns (cache_row, next_pos)."""
+        prompt = np.asarray(req.prompt)
+        n = prompt.shape[0]
+        bucket = self._bucket_len(n)
+        if bucket > n:
+            pad = np.zeros((bucket - n,) + prompt.shape[1:], prompt.dtype)
+            prompt = np.concatenate([prompt, pad])
+        self._compiled_buckets.add((bucket,) + prompt.shape[1:])
+        toks = jnp.asarray(prompt)[None]                  # (1, S[,C])
+        logits, cache1, npos = self._prefill(self.params, toks,
+                                             jnp.asarray(n, jnp.int32))
+        tok = self._sample(logits[:, -1], req.temperature)
+        req.out_tokens.append(int(np.asarray(tok).reshape(-1)[0]))
+        self.stats["prefill_tokens"] += n
+        self.stats["prefill_padded_tokens"] += bucket - n
+        self.stats["prefill_compilations"] = len(self._compiled_buckets)
+        return cache1, int(npos)
 
     def _splice_cache(self, slot: int, row_cache):
         """Copy a prefilled (batch=1) cache into slot `slot`."""
@@ -74,18 +160,10 @@ class ServeEngine:
             return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
         self.cache = jax.tree.map(put, self.cache, row_cache)
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                toks = jnp.asarray(req.prompt)[None]          # (1, S[,C])
-                logits, cache1, npos = self._prefill(self.params, toks)
-                self._splice_cache(s, cache1)
-                self.pos = self.pos.at[s].set(npos)
-                tok = self._sample(logits[:, -1], req.temperature)
-                req.out_tokens.append(int(np.asarray(tok).reshape(-1)[0]))
-                self.active[s] = req
-                self.stats["prefill_tokens"] += int(toks.shape[1])
+    def _activate(self, slot: int, req: Request, cache1, npos: int):
+        self._splice_cache(slot, cache1)
+        self.pos = self.pos.at[slot].set(npos)
+        self.active[slot] = req
 
     def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
         if temperature <= 0:
@@ -94,25 +172,25 @@ class ServeEngine:
         return jax.random.categorical(sub, logits / temperature, axis=-1)
 
     # ------------------------------------------------------------------
-    def step(self) -> int:
-        """Admit + one decode step for all active slots. Returns number
-        of active requests."""
-        self._admit()
-        act = [s for s in range(self.slots) if self.active[s] is not None]
-        if not act:
-            return 0
+    def _decode_compute(self, act: List[int]) -> jax.Array:
+        """One real decode step for the active slots; returns logits."""
         cb = self.cfg.num_codebooks
         last = np.zeros((self.slots,) + ((cb,) if cb > 1 else ()), np.int32)
         for s in act:
-            t = self.active[s].out_tokens[-1]
-            last[s] = t
+            last[s] = self.active[s].out_tokens[-1]
         tokens = jnp.asarray(last)[:, None]                    # (B,1[,C])
-        logits, self.cache = self._decode(self.params, tokens, self.cache, self.pos)
+        logits, self.cache = self._decode(self.params, tokens, self.cache,
+                                          self.pos)
         self.pos = self.pos + jnp.asarray(
             [1 if self.active[s] is not None else 0 for s in range(self.slots)],
             jnp.int32)
         self.stats["decode_steps"] += 1
+        return logits
+
+    def _finish_decode(self, act: List[int], logits: jax.Array) -> List[Request]:
+        """Append sampled tokens, retire finished requests."""
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        retired: List[Request] = []
         for s in act:
             req = self.active[s]
             if req.temperature > 0:
@@ -126,6 +204,103 @@ class ServeEngine:
                 req.done = True
                 self.active[s] = None
                 self.finished.append(req)
+                retired.append(req)
+        return retired
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if self.active[s] is None:
+                return s
+        return None
+
+
+class ServeEngine(_EngineCore):
+    """Synchronous engine. Optional ``runtime`` + ``time_model`` charge
+    each prefill and decode step as *blocking* fabric transfers, putting
+    this engine on the same simulated timeline as StagedServeEngine —
+    with zero overlap, which is exactly the baseline the staged pipeline
+    is measured against."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, impl: str = "auto",
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 fabric: Optional[Fabric] = None,
+                 cache_hit_mass: float = 0.7, placement_costs=None,
+                 runtime: Optional[FabricRuntime] = None,
+                 time_model: Optional[ServeTimeModel] = None,
+                 bucket_prefill: bool = True):
+        super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
+                         cache_dtype=cache_dtype, seed=seed,
+                         bucket_prefill=bucket_prefill)
+        self.runtime, self.tm = runtime, time_model
+        if runtime is not None and time_model is None:
+            raise ValueError("a runtime needs a ServeTimeModel")
+        self.placement = None
+        if fabric is not None:
+            from repro.serve.disagg import plan_decode_placement
+            self.placement = plan_decode_placement(
+                fabric, hit_mass=cache_hit_mass, costs=placement_costs)
+
+    # ------------------------------------------------------------------
+    def _charge(self, path: str, amount: float, flow: str) -> None:
+        """Run a transfer to completion (the sync engine blocks on it)."""
+        if self.runtime is None or amount <= 0:
+            return
+        tr = self.runtime.transfer(path, amount, flow=flow)
+        self.runtime.clock.run(stop=lambda: tr.done)
+
+    def _now(self) -> Optional[float]:
+        return self.runtime.clock.now if self.runtime is not None else None
+
+    def _arrived(self, req: Request) -> bool:
+        return self.runtime is None or req.arrival <= self.runtime.clock.now
+
+    def _advance_to_next_arrival(self) -> None:
+        """When idle but requests are still due, jump the clock."""
+        if self.runtime is None or any(a is not None for a in self.active):
+            return
+        pending = [r.arrival for r in self.queue
+                   if r.arrival > self.runtime.clock.now]
+        if pending and not any(self._arrived(r) for r in self.queue):
+            self.runtime.clock.run(until=min(pending))
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                continue
+            idx = next((i for i, r in enumerate(self.queue)
+                        if self._arrived(r)), None)
+            if idx is None:
+                break
+            req = self.queue.pop(idx)
+            if self.placement is not None:
+                req.placement = self.placement.location
+            cache1, npos = self._prefill_request(req)
+            if self.tm is not None:
+                amt = len(np.asarray(req.prompt)) * self.tm.prefill_units_per_token
+                self._charge(self.tm.prefill_path, amt, f"prefill:{req.rid}")
+            req.first_token_time = self._now()
+            self._activate(s, req, cache1, npos)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns number
+        of active requests."""
+        self._advance_to_next_arrival()
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        logits = self._decode_compute(act)
+        if self.tm is not None:
+            placements = {self.active[s].placement for s in act}
+            for pl in sorted(placements, key=str):
+                n = sum(1 for s in act if self.active[s].placement == pl)
+                self._charge(self.tm.decode_path_for(pl),
+                             n * self.tm.decode_units_per_slot, f"decode:{pl}")
+        retired = self._finish_decode(act, logits)
+        for req in retired:
+            req.finish_time = self._now()
         return len(act)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -136,5 +311,187 @@ class ServeEngine:
         while (self.queue or any(self.active)) and steps < max_steps:
             self.step()
             steps += 1
+        completed, self.finished = self.finished, []
+        return completed
+
+
+# ----------------------------------------------------------------------
+# the staged pipeline
+# ----------------------------------------------------------------------
+
+class PrefillStage:
+    """Dispatches a prefill process per arrived request: real prefill
+    compute, then the KV-cache transfer over ``tm.prefill_path``.
+    Concurrent prefills fair-share the path (``max_inflight`` bounds
+    them); TTFT is stamped at transfer completion — *before* a decode
+    slot is free, which is where the staged win over the synchronous
+    engine comes from."""
+
+    def __init__(self, engine: "StagedServeEngine", max_inflight: int = 2):
+        self.engine = engine
+        self.max_inflight = max_inflight
+        self.inflight = 0
+
+    def process(self):
+        eng = self.engine
+        while True:
+            while eng.queue and self.inflight < self.max_inflight:
+                req = eng.queue.pop(0)
+                self.inflight += 1
+                eng.runtime.process(self._one(req), name=f"prefill:{req.rid}")
+            yield eng.arrived
+
+    def _one(self, req: Request):
+        eng, tm = self.engine, self.engine.tm
+        cache1, npos = eng._prefill_request(req)
+        amt = len(np.asarray(req.prompt)) * tm.prefill_units_per_token
+        if amt > 0:
+            yield eng.runtime.transfer(tm.prefill_path, amt,
+                                       flow=f"prefill:{req.rid}")
+        req.first_token_time = eng.clock.now
+        eng.ready.append((req, cache1, npos))
+        self.inflight -= 1
+        eng.arrived.fire()        # the dispatcher may start the next prefill
+        eng.admittable.fire()
+
+
+class AdmitStage:
+    """Moves prefilled requests into free decode slots. With
+    ``plan_placement`` the §5.2 decode-cache placement is re-evaluated
+    *per admitted request* against the live ledger (current holders and
+    reservations), not once at startup."""
+
+    def __init__(self, engine: "StagedServeEngine"):
+        self.engine = engine
+
+    def process(self):
+        eng = self.engine
+        while True:
+            admitted = False
+            while eng.ready:
+                s = eng._free_slot()
+                if s is None:
+                    break
+                req, cache1, npos = eng.ready.pop(0)
+                if eng.plan_placement:
+                    req.placement = eng._plan_placement().location
+                    eng.placements[req.placement] = \
+                        eng.placements.get(req.placement, 0) + 1
+                eng._activate(s, req, cache1, npos)
+                admitted = True
+            if admitted:
+                eng.decodable.fire()
+            yield eng.admittable
+
+
+class DecodeStage:
+    """Advances every active slot one token per iteration; the step's
+    batched cache read is charged as transfers on the decode path(s),
+    overlapping any in-flight prefill transfers."""
+
+    def __init__(self, engine: "StagedServeEngine"):
+        self.engine = engine
+
+    def process(self):
+        eng, tm = self.engine, self.engine.tm
+        while True:
+            act = [s for s in range(eng.slots) if eng.active[s] is not None]
+            if not act:
+                if eng._n_open == 0:
+                    return
+                yield eng.decodable
+                continue
+            logits = eng._decode_compute(act)
+            groups: Dict[str, int] = {}
+            for s in act:
+                path = tm.decode_path_for(eng.active[s].placement)
+                groups[path] = groups.get(path, 0) + 1
+            # start every placement group's cache read at once; the step
+            # completes when the slowest path drains
+            transfers = [
+                eng.runtime.transfer(path, groups[path] * tm.decode_units_per_slot,
+                                     flow=f"decode:{path}")
+                for path in sorted(groups)
+                if groups[path] * tm.decode_units_per_slot > 0]
+            for tr in transfers:
+                yield tr
+            retired = eng._finish_decode(act, logits)
+            for req in retired:
+                req.finish_time = eng.clock.now
+                eng._n_open -= 1
+            if retired:
+                eng.admittable.fire()
+
+
+class StagedServeEngine(_EngineCore):
+    """The event-driven serving pipeline (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, impl: str = "auto",
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 fabric: Optional[Fabric] = None,
+                 time_model: Optional[ServeTimeModel] = None,
+                 runtime: Optional[FabricRuntime] = None,
+                 bucket_prefill: bool = True,
+                 plan_placement: bool = False,
+                 cache_hit_mass: float = 0.7, placement_costs=None,
+                 max_inflight_prefills: int = 2):
+        super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
+                         cache_dtype=cache_dtype, seed=seed,
+                         bucket_prefill=bucket_prefill)
+        if runtime is None:
+            if fabric is None:
+                raise ValueError("StagedServeEngine needs a fabric or runtime")
+            runtime = FabricRuntime(fabric)
+        if time_model is None:
+            raise ValueError("StagedServeEngine needs a ServeTimeModel")
+        self.runtime, self.tm = runtime, time_model
+        self.clock = runtime.clock
+        self.plan_placement = plan_placement
+        self.cache_hit_mass, self.placement_costs = cache_hit_mass, placement_costs
+        self.placements: Dict[str, int] = {}
+        self.ready: List[Tuple[Request, Any, int]] = []
+        self.arrived = Signal(self.clock)
+        self.admittable = Signal(self.clock)
+        self.decodable = Signal(self.clock)
+        self.prefill_stage = PrefillStage(self, max_inflight=max_inflight_prefills)
+        self.admit_stage = AdmitStage(self)
+        self.decode_stage = DecodeStage(self)
+        self._n_open = 0
+        self._started = False
+
+    def _plan_placement(self):
+        from repro.serve.disagg import plan_decode_placement
+        return plan_decode_placement(
+            self.runtime.fabric, hit_mass=self.cache_hit_mass,
+            costs=self.placement_costs, ledger=self.runtime.ledger)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        """Requests enter the queue at their ``arrival`` time."""
+        self._n_open += 1
+        self.clock.at(max(req.arrival, self.clock.now), self._on_arrival, req)
+
+    def _on_arrival(self, req: Request):
+        self.queue.append(req)
+        self.arrived.fire()
+
+    def _start(self):
+        if not self._started:
+            self._started = True
+            self.runtime.process(self.prefill_stage.process(), name="PrefillStage")
+            self.runtime.process(self.admit_stage.process(), name="AdmitStage")
+            self._decode_proc = self.runtime.process(
+                self.decode_stage.process(), name="DecodeStage")
+
+    def run(self, until: Optional[float] = None) -> List[Request]:
+        """Run the simulated timeline until all submitted requests are
+        served (or ``until``); returns and drains the retired requests."""
+        self._start()
+        if self._decode_proc.done and self._n_open > 0:
+            # the decode loop drained on a previous run(); new work arrived
+            self._decode_proc = self.runtime.process(
+                self.decode_stage.process(), name="DecodeStage")
+        self.clock.run(until=until)
         completed, self.finished = self.finished, []
         return completed

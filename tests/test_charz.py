@@ -47,6 +47,74 @@ def test_axis_attribution_fused():
     assert attribute_axes(sorted(grp), MESH) == ("pod", "data")
 
 
+def test_axis_attribution_trivial_and_full():
+    # groups of <= 1 span nothing
+    assert attribute_axes([], MESH) == ()
+    assert attribute_axes([7], MESH) == ()
+    # the whole mesh is the full fused run
+    assert attribute_axes(list(range(512)), MESH) == ("pod", "data", "model")
+
+
+def test_axis_attribution_smallest_stride_fallback():
+    """A partial-axis group matches no exact axis and no contiguous run;
+    it falls back to the smallest stride whose axis can contain the
+    jumps — here 3 of data's 16 members."""
+    assert attribute_axes([0, 16, 32], MESH) == ("data",)
+    # partial model-axis group: stride 1 -> model
+    assert attribute_axes([3, 4, 5, 6], MESH) == ("model",)
+    # stride that fits no axis at all (= 2 x pod stride): every axis is
+    # rejected and the fallback attributes to the whole axis list
+    assert attribute_axes([0, 512], MESH) == ("pod", "data", "model")
+
+
+def test_collective_permute_source_target_pairs():
+    """Each source-target pair becomes a 2-group; attribution uses the
+    first pair, traffic is the full payload, group_size is forced to 2."""
+    # pod-crossing pairs (stride 256)
+    hlo = ("%cp = f32[128]{0} collective-permute(%x), channel_id=9, "
+           "source_target_pairs={{0,256},{1,257},{2,258}}")
+    (op,) = parse_collectives(hlo, MESH)
+    assert op.op == "collective-permute"
+    assert op.axes == ("pod",)
+    assert op.group_size == 2
+    assert op.traffic_per_chip == 128 * 4            # full result, no (n-1)/n
+    # neighbor shift along model (stride 1)
+    hlo2 = ("%cp2 = bf16[64]{0} collective-permute(%y), channel_id=10, "
+            "source_target_pairs={{0,1},{1,2},{2,3}}")
+    (op2,) = parse_collectives(hlo2, MESH)
+    assert op2.axes == ("model",)
+    assert op2.traffic_per_chip == 64 * 2
+
+
+def test_iota_groups_with_transpose_attribution():
+    """[g,s]<=[dims]T(perm) iota groups: the transpose changes which
+    axis is innermost, and attribution must follow the permuted layout."""
+    # untransposed: [32,16]<=[512] -> groups are contiguous model rows
+    hlo = ("%ag = f32[16]{0} all-gather(%x), channel_id=11, "
+           "replica_groups=[32,16]<=[512], dimensions={0}")
+    (op,) = parse_collectives(hlo, MESH)
+    assert op.axes == ("model",)
+    # transposed T(1,2,0): each group mixes model (stride 1) and pod
+    # (stride 256) members -> not an axis, not a contiguous run; the
+    # smallest-stride fallback lands on model
+    hlo_t = ("%rs = s8[64]{0} reduce-scatter(%y), channel_id=12, "
+             "replica_groups=[16,32]<=[2,16,16]T(1,2,0), dimensions={0}")
+    (op_t,) = parse_collectives(hlo_t, MESH)
+    assert op_t.group_size == 32
+    assert op_t.axes == ("model",)
+    # transposed T(0,2,1): groups hold one pod's data-axis members
+    hlo_d = ("%ag2 = f32[8]{0} all-gather(%z), channel_id=13, "
+             "replica_groups=[32,16]<=[2,16,16]T(0,2,1), dimensions={0}")
+    (op_d,) = parse_collectives(hlo_d, MESH)
+    assert op_d.axes == ("data",)
+    # fused multi-axis iota: [2,256]<=[512] -> (data, model) runs
+    hlo_f = ("%ar2 = f32[4]{0} all-reduce(%w), channel_id=14, "
+             "replica_groups=[2,256]<=[512], to_apply=%add")
+    (op_f,) = parse_collectives(hlo_f, MESH)
+    assert op_f.axes == ("data", "model")
+    assert op_f.group_size == 256
+
+
 def test_traffic_model():
     ops = parse_collectives(HLO_SAMPLE, MESH)
     ar = next(o for o in ops if o.op == "all-reduce")

@@ -3,9 +3,9 @@
 The ledger properties run on randomized fabrics/sequences (seeded, no
 hypothesis dependency): budgets are conserved under any allocation
 sequence, no path is over-committed, and release restores exactly.
-The router section re-derives the §5.1/§5.2 calibration that
-tests/test_planner.py asserts through the deprecated shim — here
-through the first-class API.
+The router section re-derives the §5.1/§5.2 calibration from the
+ledger side; tests/test_planner.py asserts the same numbers through
+the router/alternatives surface.
 """
 import math
 import random

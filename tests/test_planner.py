@@ -1,10 +1,11 @@
-"""§4.2 planner: reproduce the paper's own analytics."""
+"""§4.2 routing: reproduce the paper's own analytics (Fabric API)."""
 import math
 
 import pytest
 
-from repro.core.planner import (Alternative, PathPlanner, PathUse,
-                                linefs_alternatives, linefs_paths)
+from repro.core.fabric import (Alternative, MultipathRouter, Use,
+                               linefs_fabric,
+                               linefs_replication_alternatives)
 from repro.core.compression import compression_wins, offload_path_bandwidth
 
 N = 200e9 / 8   # paper testbed: 200 Gbps network
@@ -13,18 +14,18 @@ P = 256e9 / 8   # 256 Gbps internal PCIe
 
 def test_linefs_a1_peak_matches_paper():
     """Paper §5.1: without compression A1 peaks at 128 Gbps."""
-    paths = linefs_paths(N, P)
-    a1 = linefs_alternatives(N, P, ratio=1.0)[0]
-    assert abs(a1.solo_rate(paths) * 8 / 1e9 - 128) < 1
+    fabric = linefs_fabric(N, P)
+    a1 = linefs_replication_alternatives(N, P, ratio=1.0)[0]
+    assert abs(a1.solo_rate(fabric) * 8 / 1e9 - 128) < 1
 
 
 def test_linefs_compression_threshold():
     """Paper §5.1: A1 beats direct send iff ratio < P/N - 1 = 28%."""
-    paths = linefs_paths(N, P)
+    fabric = linefs_fabric(N, P)
     for ratio, wins in [(0.2, True), (0.27, True), (0.29, False), (0.5, False)]:
-        alts = linefs_alternatives(N, P, ratio)
+        alts = linefs_replication_alternatives(N, P, ratio)
         a1, a3 = alts[0], alts[2]
-        assert (a1.solo_rate(paths) > a3.solo_rate(paths)) == wins, ratio
+        assert (a1.solo_rate(fabric) > a3.solo_rate(fabric)) == wins, ratio
         assert compression_wins(N, P, ratio) == wins
 
 
@@ -35,39 +36,39 @@ def test_offload_bandwidth_formula():
 
 def test_greedy_combine_exceeds_solo():
     """A2 (SoC-capped) + A3 fills the leftover network (Fig 15)."""
-    paths = linefs_paths(N, P)
-    alts = linefs_alternatives(N, P, ratio=0.5, soc_rate=12e9)
-    pl = PathPlanner(paths)
-    allocs, total = pl.combine_greedy([alts[1], alts[2]])
-    assert total > alts[1].solo_rate(paths)
-    assert total > 0.9 * alts[2].solo_rate(paths)
+    fabric = linefs_fabric(N, P)
+    alts = linefs_replication_alternatives(N, P, ratio=0.5, soc_rate=12e9)
+    router = fabric.router()
+    allocs, total = router.allocate([alts[1], alts[2]])
+    assert total > alts[1].solo_rate(fabric)
+    assert total > 0.9 * alts[2].solo_rate(fabric)
     assert allocs[0].bottleneck == "compute"          # SoC caps A2
     assert allocs[1].bottleneck.startswith("net")     # A3 fills network
 
 
 def test_bidirectional_multiplexing():
     """Fig 5: opposite-direction flows on one link reach ~2x one-way."""
-    paths = linefs_paths(N, P)
-    read = Alternative("read", uses=[PathUse("net", out_bytes=1)])
-    write = Alternative("write", uses=[PathUse("net", in_bytes=1)])
-    pl = PathPlanner(paths)
-    _, total = pl.combine_greedy([read, write])
+    fabric = linefs_fabric(N, P)
+    read = Alternative("read", uses=[Use("net", out=1)])
+    write = Alternative("write", uses=[Use("net", in_=1)])
+    router = fabric.router()
+    _, total = router.allocate([read, write])
     assert abs(total - 2 * N) / (2 * N) < 1e-6
     # same-direction flows share one budget
-    read2 = Alternative("read2", uses=[PathUse("net", out_bytes=1)])
-    _, total_same = pl.combine_greedy([read, read2])
+    read2 = Alternative("read2", uses=[Use("net", out=1)])
+    _, total_same = router.allocate([read, read2])
     assert abs(total_same - N) / N < 1e-6
 
 
 def test_double_crossing_consumes_both_directions():
     """Paper path-③: crossing a link twice exhausts the bidirectional
     budget — adding an opposite flow gains nothing."""
-    paths = linefs_paths(N, P)
-    relay = Alternative("relay", uses=[PathUse("internal", out_bytes=1, in_bytes=1)])
-    other = Alternative("other", uses=[PathUse("internal", out_bytes=1)])
-    pl = PathPlanner(paths)
-    _, solo = pl.combine_greedy([relay])
-    allocs, total = pl.combine_greedy([relay, other])
+    fabric = linefs_fabric(N, P)
+    relay = Alternative("relay", uses=[Use("internal", out=1, in_=1)])
+    other = Alternative("other", uses=[Use("internal", out=1)])
+    router = fabric.router()
+    _, solo = router.allocate([relay])
+    allocs, total = router.allocate([relay, other])
     assert abs(solo - P) / P < 1e-6          # capped at uni-directional P
     assert total == solo                      # nothing left for `other`
     assert allocs[1].rate == 0.0
@@ -76,19 +77,32 @@ def test_double_crossing_consumes_both_directions():
 def test_slack_rule():
     """B_slow <= P - N: after the primary saturates the network, the
     internal link retains P - N for offload traffic."""
-    paths = linefs_paths(N, P)
-    primary = Alternative("primary", uses=[PathUse("net", out_bytes=1),
-                                           PathUse("internal", out_bytes=1)])
-    pl = PathPlanner(paths)
-    slack = pl.slack(primary, "internal")
+    fabric = linefs_fabric(N, P)
+    primary = Alternative("primary", uses=[Use("net", out=1),
+                                           Use("internal", out=1)])
+    slack = fabric.router().slack(primary, "internal")
     assert abs(slack - (P - N)) / P < 1e-6
+
+
+def test_solo_rate_against_live_ledger():
+    """solo_rate(ledger=...) sees remaining budgets + the discount from
+    live holders, not the pristine fabric."""
+    fabric = linefs_fabric(N, P)
+    alt = Alternative("a3", uses=[Use("net", out=1)])
+    assert alt.solo_rate(fabric) == pytest.approx(N)
+    ledger = fabric.ledger()
+    ledger.reserve("net", out=0.5 * N, flow="primary")
+    live = alt.solo_rate(fabric, ledger=ledger)
+    # half the budget is spoken for; joining makes 2 holders — the
+    # fabric has no discount configured here so it is exactly the rest
+    assert live == pytest.approx(0.5 * N)
 
 
 def test_drtm_kv_calibration():
     """§5.2 / Fig 17-18 reproduction within a few percent."""
     from repro.serve.disagg import DisaggKV, KVStoreParams
     kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
-    paths, alts = kv.paths(), kv.alternatives()
+    paths, alts = kv.fabric(), kv.alternatives()
     assert abs(alts["A1"].solo_rate(paths) / 1e6 - 50) < 3
     assert abs(alts["A4"].solo_rate(paths) / 1e6 - 58.3) < 3
     assert abs(alts["A5"].solo_rate(paths) / 1e6 - 70) < 3

@@ -12,9 +12,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.compression import (ErrorFeedback, compress_with_feedback,
                                     dequantize_int8_blockwise,
                                     quantize_int8_blockwise)
+from repro.core.fabric import Alternative, Fabric, Path, Use
 from repro.core.paths import collective_bytes_per_chip
-from repro.core.planner import Alternative, PathPlanner, PathUse
-from repro.core.paths import PathSpec
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -57,11 +56,9 @@ def test_collective_traffic_monotone_in_group(op, n, nbytes):
     assert collective_bytes_per_chip(op, nbytes, 1) == 0.0
 
 
-def _mk_paths(bw1, bw2):
-    return {
-        "p1": PathSpec("p1", "ici", None, 2, bw1, 0, True, "g1"),
-        "p2": PathSpec("p2", "ici", None, 2, bw2, 0, True, "g2"),
-    }
+def _mk_fabric(bw1, bw2):
+    return Fabric.of(Path("p1", bw1, kind="ici", shared_group="g1"),
+                     Path("p2", bw2, kind="ici", shared_group="g2"))
 
 
 @given(st.floats(1.0, 1e3), st.floats(1.0, 1e3),
@@ -69,13 +66,13 @@ def _mk_paths(bw1, bw2):
 def test_greedy_combine_bounded_by_solo_sum(bw1, bw2, u1, u2):
     """Combined rate never exceeds the sum of solo rates, and never
     falls below the best solo rate (greedy picks it first)."""
-    paths = _mk_paths(bw1, bw2)
-    a = Alternative("a", uses=[PathUse("p1", out_bytes=u1)])
-    b = Alternative("b", uses=[PathUse("p2", out_bytes=u2)])
-    pl = PathPlanner(paths)
-    ranked = pl.rank([a, b])
-    _, total = pl.combine_greedy(ranked)
-    solos = [a.solo_rate(paths), b.solo_rate(paths)]
+    fabric = _mk_fabric(bw1, bw2)
+    a = Alternative("a", uses=[Use("p1", out=u1)])
+    b = Alternative("b", uses=[Use("p2", out=u2)])
+    router = fabric.router()
+    ranked = router.rank([a, b])
+    _, total = router.allocate(ranked)
+    solos = [a.solo_rate(fabric), b.solo_rate(fabric)]
     assert total <= sum(solos) + 1e-6
     assert total >= max(solos) - 1e-6
 
@@ -83,13 +80,29 @@ def test_greedy_combine_bounded_by_solo_sum(bw1, bw2, u1, u2):
 @given(st.floats(1.0, 1e3), st.floats(0.1, 4.0), st.integers(1, 4))
 def test_shared_path_conserves_budget(bw, use, nalts):
     """N alternatives on one shared path: allocations sum to <= budget."""
-    paths = _mk_paths(bw, bw)
-    alts = [Alternative(f"a{i}", uses=[PathUse("p1", out_bytes=use)])
+    fabric = _mk_fabric(bw, bw)
+    alts = [Alternative(f"a{i}", uses=[Use("p1", out=use)])
             for i in range(nalts)]
-    pl = PathPlanner(paths)
-    allocs, total = pl.combine_greedy(alts)
+    allocs, total = fabric.router().allocate(alts)
     spent = sum(al.rate * use for al in allocs)
     assert spent <= bw * (1 + 1e-9)
+
+
+@given(st.floats(1.0, 1e3), st.integers(1, 5), st.floats(0.0, 0.3))
+def test_runtime_transfers_conserve_ledger(bw, n, disc):
+    """N concurrent transfers on one discounted path: all finish, the
+    ledger returns to zero, and the makespan is bracketed by the
+    undiscounted and fully-discounted aggregate rates."""
+    from repro.core.runtime import FabricRuntime
+    fabric = Fabric.of(Path("p", bw), concurrency_discount=disc)
+    rt = FabricRuntime(fabric)
+    trs = [rt.transfer("p", 10.0 * (i + 1)) for i in range(n)]
+    rt.clock.run()
+    assert all(t.done for t in trs)
+    assert rt.ledger.reserved("p", "out") == pytest.approx(0.0, abs=1e-9)
+    total = sum(t.amount for t in trs)
+    assert rt.clock.now >= total / bw * (1 - 1e-9)
+    assert rt.clock.now <= total / (bw * (1.0 - disc)) * (1 + 1e-9)
 
 
 @given(st.integers(0, 10_000), st.integers(0, 10_000))

@@ -117,7 +117,7 @@ def test_disagg_latency_ordering():
 
 def test_disagg_combined_beats_components():
     kv = DisaggKV(KVStoreParams(n_keys=100_000, soc_cache_keys=10_000))
-    paths, alts = kv.paths(), kv.alternatives()
+    paths, alts = kv.fabric(), kv.alternatives()
     total, allocs = kv.combined_a4_a5()
     assert total > alts["A4"].solo_rate(paths)
     assert sum(a.rate for a in allocs) == pytest.approx(total)

@@ -1,0 +1,80 @@
+"""Simulated training cluster: checkpoint contention + straggler FT.
+
+The §6.1 story as tokens/s: staging checkpoint shards over the SoC
+path vs the host path while the host direction is busy with gradient
+allreduce traffic (and the ordering flip when the fabric is idle), and
+occupancy-driven straggler mitigation under a loaded host path. All
+timing-only — the numeric stream is exercised by tests/test_cluster.py.
+"""
+from __future__ import annotations
+
+from repro.train.cluster import ClusterTimeModel, TrainCluster
+
+from benchmarks.common import row
+
+STEPS, NODES = 8, 2
+CKPT_EVERY = 2
+
+
+def _tokens_per_s(grad_bytes: float, ckpt_path: str, *, ckpt_bytes=8e9,
+                  compute_s=0.05, **cluster_kw) -> float:
+    tm = ClusterTimeModel(compute_s=compute_s, grad_bytes=grad_bytes,
+                          ckpt_bytes=ckpt_bytes, ckpt_path=ckpt_path,
+                          tokens_per_step=4096 * 16)
+    cluster = TrainCluster(cluster_kw.pop("nodes", NODES), tm,
+                           ckpt_every=CKPT_EVERY, **cluster_kw)
+    return cluster.run(STEPS)["tokens_per_s"]
+
+
+def contention_part() -> None:
+    """Checkpoint staging path choice under busy vs idle host paths."""
+    busy, idle = 8e9, 1e6
+    for label, grad in (("busy", busy), ("idle", idle)):
+        soc = _tokens_per_s(grad, "soc")
+        host = _tokens_per_s(grad, "host")
+        best = "soc" if soc > host else "host"
+        row(f"train/ckpt_soc_{label}", 1e6 * STEPS * 4096 * 16 / soc / STEPS,
+            f"tokens_per_s={soc:,.0f}")
+        row(f"train/ckpt_host_{label}", 1e6 * STEPS * 4096 * 16 / host / STEPS,
+            f"tokens_per_s={host:,.0f} winner={best} "
+            f"delta={abs(soc - host) / max(soc, host):.1%}")
+
+
+def straggler_part() -> None:
+    """One node's host path is 80% spoken for: occupancy-driven
+    rebalance shifts compute off it and the fleet speeds up."""
+    kw = dict(nodes=3, host_load={"node2": 0.8}, ckpt_bytes=0.0,
+              compute_s=0.5)
+    plain = _tokens_per_s(1e9, "soc", mitigate_stragglers=False, **kw)
+    mitigated = _tokens_per_s(1e9, "soc", mitigate_stragglers=True, **kw)
+    row("train/straggler_unmitigated", 1e12 / plain,
+        f"tokens_per_s={plain:,.0f}")
+    row("train/straggler_mitigated", 1e12 / mitigated,
+        f"tokens_per_s={mitigated:,.0f} "
+        f"win={mitigated / plain - 1:.1%}")
+
+
+def elastic_part() -> None:
+    """Node failure mid-run: detect -> resize -> resume, in sim time."""
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=2e9,
+                          tokens_per_step=4096 * 16)
+    cluster = TrainCluster(4, tm, fail_at=("node3", 4),
+                           heartbeat_every=0.2, heartbeat_timeout=1.0)
+    s = cluster.run(STEPS)
+    detect = next(e["t"] for e in s["events"]
+                  if e["event"] == "failure_detected")
+    silent = next(e["t"] for e in s["events"] if e["event"] == "node_silent")
+    row("train/elastic_detect", (detect - silent) * 1e6,
+        f"survivors={s['nodes']} mesh={s['mesh']} "
+        f"tokens_per_s={s['tokens_per_s']:,.0f}")
+
+
+def main() -> None:
+    print("# simulated train cluster: ckpt contention / stragglers / elastic")
+    contention_part()
+    straggler_part()
+    elastic_part()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import traceback
 from benchmarks import (bench_bidirectional, bench_bucketing, bench_concurrent,
                         bench_granularity, bench_kernels, bench_kvserve,
                         bench_paths, bench_replication, bench_runtime,
-                        bench_skew, roofline)
+                        bench_skew, bench_train, roofline)
 from benchmarks import common
 
 SECTIONS = [
@@ -23,6 +23,7 @@ SECTIONS = [
     ("bucketing (Fig 10)", bench_bucketing.main),
     ("concurrent (Fig 12/§4.1)", bench_concurrent.main),
     ("runtime (event-driven fabric)", bench_runtime.main),
+    ("train (§6.1 cluster)", bench_train.main),
     ("replication (Fig 13/15, LineFS §5.1)", bench_replication.main),
     ("kvserve (Fig 17/18, DrTM-KV §5.2)", bench_kvserve.main),
     ("kernels", bench_kernels.main),

@@ -1,21 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
-# plus the runtime/kvserve benchmark sections with schema-validated
-# JSON output (BENCH_3.json — the PR-3 perf trajectory record).
-#   scripts/ci.sh            # tests + runtime,kvserve benches
+# plus the runtime/train/kvserve benchmark sections with schema-validated
+# JSON output (BENCH_4.json — the PR-4 perf trajectory record).
+#   scripts/ci.sh            # tests + runtime,train,kvserve benches
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_3.json --only runtime,kvserve
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_4.json --only runtime,train,kvserve
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_3.json") as f:
+with open("BENCH_4.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -35,12 +35,15 @@ else:
             problems.append(f"row {i} has wrong types: {r}")
     names = {r.get("name") for r in doc.get("rows", [])}
     for required in ("runtime/replication_pipelined", "runtime/serve_staged_ttft",
-                     "fig18/staged_engine_ttft"):
+                     "fig18/staged_engine_ttft",
+                     "train/ckpt_soc_busy", "train/ckpt_host_busy",
+                     "train/ckpt_soc_idle", "train/ckpt_host_idle",
+                     "train/straggler_mitigated", "train/elastic_detect"):
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_3.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_3.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_4.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_4.json OK ({len(doc['rows'])} rows)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

@@ -24,9 +24,17 @@ captures exactly that:
                   many simulated seconds), a ``Signal`` (resume when
                   fired) or another ``Process`` (resume when it
                   returns). Completion callbacks and Processes are how
-                  dependent work is driven.
+                  dependent work is driven. ``kill()`` stops a process
+                  and cancels the transfer it is waiting on.
+``Barrier``       an N-party collective rendezvous: each party yields
+                  ``barrier.arrive()``; everyone resumes when the last
+                  party arrives (the allreduce synchronization point of
+                  a data-parallel step). ``remove_party`` shrinks the
+                  membership mid-generation (elastic resize).
 ``FabricRuntime`` ties a ``Fabric`` + ``BudgetLedger`` + ``SimClock``
-                  together and owns rate rebalancing.
+                  together and owns rate rebalancing. ``every()`` spawns
+                  a periodic process (heartbeats); ``cancel()`` aborts
+                  an in-flight transfer, releasing its reservation.
 
 Rebalancing model: whenever a transfer joins or leaves an interference
 group, every member's progress is settled at its old rate, the group's
@@ -140,7 +148,9 @@ class Transfer:
     transfers join/leave the interference group. ``max_rate`` caps the
     share (a slow endpoint); the surplus is water-filled back to the
     uncapped flows. ``done`` flips exactly once; callbacks added after
-    completion run immediately (same simulated time)."""
+    completion run immediately (same simulated time). A transfer
+    aborted via ``FabricRuntime.cancel`` is ``done`` with
+    ``canceled=True`` and ``remaining > 0``."""
     _ids = itertools.count()
 
     def __init__(self, runtime: "FabricRuntime", path: str, amount: float,
@@ -162,6 +172,7 @@ class Transfer:
         self.started_at: Optional[float] = None   # after the latency phase
         self.finished_at: Optional[float] = None
         self.done = False
+        self.canceled = False
         self._last_update = runtime.clock.now
         self._event: Optional[Event] = None        # pending completion
         self._res = 0.0                            # currently reserved rate
@@ -180,7 +191,8 @@ class Transfer:
             self._callbacks.append(fn)
 
     def __repr__(self) -> str:
-        state = "done" if self.done else f"{self.remaining:.3g} left @ {self.rate:.3g}/s"
+        state = ("canceled" if self.canceled else "done") if self.done \
+            else f"{self.remaining:.3g} left @ {self.rate:.3g}/s"
         return f"Transfer({self.path}:{self.direction}, {self.amount:.3g}, {state})"
 
 
@@ -194,13 +206,32 @@ class Process:
         self.gen = gen
         self.name = name
         self.done = False
+        self.killed = False
         self.result: Any = None
+        self._waiting: Any = None           # what the process is blocked on
         self._waiters: List[Callable[[Any], None]] = []
         runtime.clock.schedule(0.0, self._advance, None)
+
+    def kill(self) -> None:
+        """Stop the process. The transfer it is waiting on (if any) is
+        canceled — its reservation goes back to the ledger — and
+        processes joined on this one resume with ``result=None``."""
+        if self.done:
+            return
+        self.done = True
+        self.killed = True
+        waiting, self._waiting = self._waiting, None
+        if isinstance(waiting, Transfer) and not waiting.done:
+            self.runtime.cancel(waiting)
+        self.gen.close()
+        waiters, self._waiters = self._waiters, []
+        for w in waiters:
+            self.runtime.clock.schedule(0.0, w, None)
 
     def _advance(self, send_value: Any) -> None:
         if self.done:
             return
+        self._waiting = None
         try:
             item = self.gen.send(send_value)
         except StopIteration as e:
@@ -214,6 +245,7 @@ class Process:
 
     def _wait_on(self, item: Any) -> None:
         clock = self.runtime.clock
+        self._waiting = item
         if isinstance(item, Transfer):
             item.add_callback(lambda t: self._advance(t))
         elif isinstance(item, Process):
@@ -233,7 +265,69 @@ class Process:
                 "Transfer, Process, Signal, or a delay in seconds")
 
     def __repr__(self) -> str:
-        return f"Process({self.name}, {'done' if self.done else 'running'})"
+        state = ("killed" if self.killed else "done") if self.done else "running"
+        return f"Process({self.name}, {state})"
+
+
+class Barrier:
+    """An N-party collective rendezvous on simulated time.
+
+    Each party yields ``barrier.arrive()``; when the last party arrives
+    the barrier *releases*: ``on_release(generation)`` runs first
+    (synchronously — the place for the step's bookkeeping), then every
+    waiter resumes at the same simulated instant. The barrier is
+    cyclic: after a release it is immediately reusable for the next
+    generation. ``remove_party`` shrinks the membership mid-generation
+    (a node died); if the survivors are all already waiting, the
+    barrier releases so they are not stranded behind the dead party.
+    """
+
+    def __init__(self, runtime: "FabricRuntime", parties: int, *,
+                 on_release: Optional[Callable[[int], None]] = None,
+                 name: str = "barrier"):
+        if parties < 1:
+            raise ValueError(f"barrier {name}: parties must be >= 1")
+        self.runtime = runtime
+        self.parties = parties
+        self.name = name
+        self.generation = 0
+        self._count = 0
+        self._signal = runtime.signal()
+        self._on_release = on_release
+
+    @property
+    def waiting(self) -> int:
+        return self._count
+
+    def arrive(self):
+        """Register one arrival. Returns a yieldable: the last arriver
+        resumes immediately (after releasing everyone), earlier
+        arrivers resume when the barrier releases."""
+        self._count += 1
+        if self._count >= self.parties:
+            self._release()
+            return 0.0
+        return self._signal
+
+    def remove_party(self, n: int = 1) -> None:
+        if n > self.parties:
+            raise ValueError(
+                f"barrier {self.name}: removing {n} of {self.parties} parties")
+        self.parties -= n
+        if 0 < self.parties <= self._count:
+            self._release()
+
+    def _release(self) -> None:
+        self._count = 0
+        self.generation += 1
+        if self._on_release is not None:
+            self._on_release(self.generation)
+        sig, self._signal = self._signal, self.runtime.signal()
+        sig.fire(self.generation)
+
+    def __repr__(self) -> str:
+        return (f"Barrier({self.name}, {self._count}/{self.parties} waiting, "
+                f"gen={self.generation})")
 
 
 class FabricRuntime:
@@ -287,6 +381,57 @@ class FabricRuntime:
     def signal(self) -> Signal:
         return Signal(self.clock)
 
+    def barrier(self, parties: int, *,
+                on_release: Optional[Callable[[int], None]] = None,
+                name: str = "barrier") -> Barrier:
+        return Barrier(self, parties, on_release=on_release, name=name)
+
+    def every(self, interval: float, fn: Callable[[], None], *,
+              name: str = "periodic",
+              start_delay: Optional[float] = None) -> Process:
+        """Spawn a process calling ``fn()`` every ``interval`` simulated
+        seconds (first call after ``start_delay``, default ``interval``)
+        until killed — heartbeats, samplers, watchdogs. Remember to
+        ``kill()`` it (or run the clock with a ``stop``/``until``), or
+        the event heap never drains."""
+        if interval <= 0:
+            raise ValueError(f"periodic {name}: interval must be > 0")
+
+        def _loop():
+            yield interval if start_delay is None else start_delay
+            while True:
+                fn()
+                yield interval
+
+        return self.process(_loop(), name=name)
+
+    def cancel(self, t: Transfer) -> None:
+        """Abort an in-flight transfer: settle its progress, release its
+        reservation back to the ledger, rebalance the survivors. The
+        transfer ends ``done`` with ``canceled=True`` and whatever
+        ``remaining`` it had; completion callbacks still fire (waiters
+        must not hang) and can inspect ``canceled``."""
+        if t.done:
+            return
+        group = self.fabric[t.path].group
+        now = self.clock.now
+        if t in self._active.get(group, []):
+            dt = now - t._last_update
+            if dt > 0 and t.rate > 0:
+                t.remaining = max(0.0, t.remaining - t.rate * dt)
+            t._last_update = now
+            self._release(t)
+            self._active[group].remove(t)
+        t.canceled = True
+        t.done = True
+        t.finished_at = now
+        self.clock.cancel(t._event)
+        t._event = None
+        callbacks, t._callbacks = t._callbacks, []
+        for fn in callbacks:
+            fn(t)
+        self._rebalance(group)
+
     def active_transfers(self, path: Optional[str] = None) -> List[Transfer]:
         if path is None:
             return [t for ts in self._active.values() for t in ts]
@@ -309,6 +454,8 @@ class FabricRuntime:
 
     # -- mechanics ------------------------------------------------------
     def _begin(self, t: Transfer) -> None:
+        if t.done:          # canceled during the latency phase
+            return
         t.started_at = self.clock.now
         t._last_update = self.clock.now
         group = self.fabric[t.path].group

@@ -24,16 +24,36 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 
 class TokenPipeline:
+    #: extension -> token dtype, for dtype sniffing on memmap files
+    _EXT_DTYPES = {".u16": np.uint16, ".uint16": np.uint16,
+                   ".u32": np.uint32, ".uint32": np.uint32}
+
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig, *,
                  seed: int = 0, data_path: Optional[str] = None,
-                 noise: float = 0.1):
+                 noise: float = 0.1, dtype: Optional[np.dtype] = None):
         self.cfg = cfg
         self.shape = shape
         self.seed = seed
         self.noise = noise
         self._mm = None
         if data_path and os.path.exists(data_path):
-            self._mm = np.memmap(data_path, dtype=np.uint16, mode="r")
+            self._mm = np.memmap(data_path, mode="r",
+                                 dtype=self._token_dtype(data_path, dtype))
+
+    def _token_dtype(self, data_path: str, dtype: Optional[np.dtype]):
+        """Explicit ``dtype=`` wins; otherwise sniff the extension
+        (.u16/.u32). The fallback stays uint16 — the only format the
+        pre-dtype code ever read — so existing .bin files keep their
+        meaning; a wide-vocab file must say so via dtype or extension."""
+        if dtype is not None:
+            dt = np.dtype(dtype)
+            if dt not in (np.dtype(np.uint16), np.dtype(np.uint32)):
+                raise ValueError(f"token files are uint16 or uint32, not {dt}")
+            return dt
+        ext = os.path.splitext(data_path)[1].lower()
+        if ext in self._EXT_DTYPES:
+            return np.dtype(self._EXT_DTYPES[ext])
+        return np.dtype(np.uint16)
 
     # ------------------------------------------------------------------
     def _synthetic_tokens(self, rng: np.random.Generator, b: int, s: int) -> np.ndarray:

@@ -1,11 +1,21 @@
 """Straggler detection + mitigation hooks.
 
-Detection: per-step wall times per node; a node whose EMA exceeds
-``threshold`` x the fleet median is flagged. Mitigation on a real fleet:
-(1) deprioritize its DCN traffic (planner slack rule), (2) shrink its
-microbatch share (skewed-batch rebalance), (3) if persistent, treat as
-failed -> elastic re-mesh. Here the detector + rebalance math are real;
-tests drive them with synthetic timings.
+Detection is two-signal:
+
+- per-step wall (or simulated) times per node: a node whose EMA exceeds
+  ``threshold`` x the fleet median is flagged — the lagging indicator;
+- per-node *path occupancy* read straight from the BudgetLedger
+  (``observe_ledger``): the fraction of a node's host-direction budget
+  already reserved by other flows — the leading indicator. A node whose
+  host path is spoken for will straggle on its next allreduce whether
+  or not its step times have degraded yet (the paper's §6.1 host-load
+  effect).
+
+Mitigation on a real fleet: (1) deprioritize its DCN traffic (planner
+slack rule), (2) shrink its microbatch share (skewed-batch rebalance),
+(3) if persistent, treat as failed -> elastic re-mesh. Here the
+detector + rebalance math are real; tests and the simulated
+TrainCluster drive them.
 """
 from __future__ import annotations
 
@@ -19,18 +29,44 @@ import numpy as np
 class StragglerDetector:
     alpha: float = 0.3            # EMA coefficient
     threshold: float = 1.5        # x median => straggler
+    occupancy_threshold: float = 0.5   # reserved fraction => straggler
     ema: Dict[str, float] = field(default_factory=dict)
+    occupancy: Dict[str, float] = field(default_factory=dict)
 
     def observe(self, node: str, step_seconds: float):
         prev = self.ema.get(node)
         self.ema[node] = (step_seconds if prev is None
                           else self.alpha * step_seconds + (1 - self.alpha) * prev)
 
+    def observe_occupancy(self, node: str, fraction: float):
+        """Record the externally-reserved fraction of a node's path."""
+        prev = self.occupancy.get(node)
+        self.occupancy[node] = (fraction if prev is None
+                                else self.alpha * fraction + (1 - self.alpha) * prev)
+
+    def observe_ledger(self, node: str, ledger, path: str,
+                       direction: str = "out") -> float:
+        """Sample a node's path occupancy from a live BudgetLedger —
+        call *before* the node's own flow joins the path, so the
+        reading is what everyone else holds."""
+        cap = ledger.fabric.direction_capacity(path, direction)
+        frac = ledger.reserved(path, direction) / cap if cap > 0 else 0.0
+        self.observe_occupancy(node, frac)
+        return frac
+
+    def occupied(self) -> List[str]:
+        """Nodes whose host-direction occupancy EMA exceeds the cutoff."""
+        return [n for n, v in self.occupancy.items()
+                if v > self.occupancy_threshold]
+
     def stragglers(self) -> List[str]:
-        if len(self.ema) < 2:
-            return []
-        med = float(np.median(list(self.ema.values())))
-        return [n for n, v in self.ema.items() if v > self.threshold * med]
+        """Union of time-lagging nodes and occupancy-flagged nodes."""
+        flagged = set(self.occupied())
+        if len(self.ema) >= 2:
+            med = float(np.median(list(self.ema.values())))
+            flagged |= {n for n, v in self.ema.items()
+                        if v > self.threshold * med}
+        return sorted(flagged)
 
     def rebalanced_shares(self, total_microbatches: int) -> Dict[str, int]:
         """Give each node work inversely proportional to its step time —

@@ -1,15 +1,23 @@
 """Training launcher.
 
-Two modes:
+Three modes:
 - production: the assigned mesh (16x16 / 2x16x16); on real TPU hardware
   this is the entry point a cluster scheduler invokes per host.
 - local: reduced config + small mesh on whatever devices exist (CPU
   container: set JAX_PLATFORMS=cpu and --devices N with the host-device
   override) — the end-to-end example drivers use this.
+- simulate: ``--simulate N`` dry-runs the config as N trainer nodes on
+  a named fabric (``--fabric``, see train/cluster.TRAIN_FABRICS) — no
+  real training, just the FabricRuntime timeline: roofline compute,
+  path-aware allreduce, contention-scheduled checkpoint staging.
+  Prints simulated tokens/s and the step breakdown.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --shape train_4k --steps 100 --reduced --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --shape train_4k --steps 20 --simulate 4 --fabric v5e \
+      --ckpt-staging soc --ckpt-every 5
 """
 from __future__ import annotations
 
@@ -56,6 +64,44 @@ def build(cfg, run: RunConfig, shape: ShapeConfig, mesh, *, impl="auto"):
     return params, opt, step, put_batch
 
 
+def simulate(cfg, shape, args):
+    """--simulate: dry-run the config on a named fabric (no jax work)."""
+    from repro.train.cluster import (ClusterTimeModel, TRAIN_FABRICS,
+                                     TrainCluster)
+    if args.fabric not in TRAIN_FABRICS:
+        raise SystemExit(f"unknown fabric {args.fabric!r} "
+                         f"(have {sorted(TRAIN_FABRICS)})")
+    nodes = args.simulate
+
+    def parse_pair(spec, cast):
+        name, _, val = spec.partition(":")
+        return name, cast(val)
+
+    tm = ClusterTimeModel.from_config(cfg, shape, nodes=nodes,
+                                      ckpt_path=args.ckpt_staging)
+    cluster = TrainCluster(
+        nodes, tm, fabric=TRAIN_FABRICS[args.fabric](nodes),
+        ckpt_every=args.ckpt_every,
+        host_load=dict([parse_pair(args.host_load, float)])
+        if args.host_load else None,
+        fail_at=parse_pair(args.fail, int) if args.fail else None,
+        mitigate_stragglers=True)
+    summary = cluster.run(args.steps)
+    print(f"[simulate] fabric={args.fabric} nodes={nodes} "
+          f"arch={cfg.name} shape={shape.name}")
+    print(f"[simulate] compute={tm.compute_s * 1e3:.2f}ms/step "
+          f"grad={tm.grad_bytes / 1e9:.2f}GB ckpt={tm.ckpt_bytes / 1e9:.2f}GB "
+          f"via {tm.ckpt_path}")
+    for e in summary["events"]:
+        print(f"[simulate] t={e['t']:.3f}s {e['event']} "
+              f"{ {k: v for k, v in e.items() if k not in ('t', 'event')} }")
+    print(f"[simulate] {summary['steps']} steps in "
+          f"{summary['sim_seconds']:.3f}s simulated "
+          f"-> {summary.get('tokens_per_s', 0.0):,.0f} tokens/s "
+          f"({len(cluster.straggler.stragglers())} stragglers flagged)")
+    return cluster
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -73,6 +119,20 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--ckpt-replicas", type=int, default=0)
     ap.add_argument("--log", default="")
+    ap.add_argument("--simulate", type=int, default=0, metavar="NODES",
+                    help="dry-run NODES simulated trainer nodes on a "
+                         "named fabric instead of training")
+    ap.add_argument("--fabric", default="v5e",
+                    help="named fabric for --simulate "
+                         "(v5e | weak-soc | fast-net | linefs)")
+    ap.add_argument("--ckpt-staging", default="soc", choices=["soc", "host"],
+                    help="--simulate: checkpoint staging path")
+    ap.add_argument("--host-load", default="",
+                    help="--simulate: NODE:FRAC background host-path load, "
+                         "e.g. node0:0.6")
+    ap.add_argument("--fail", default="",
+                    help="--simulate: NODE:STEP silences a node mid-run, "
+                         "e.g. node1:8")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -82,6 +142,9 @@ def main(argv=None):
     if args.batch or args.seq:
         shape = ShapeConfig("custom", args.seq or shape.seq_len,
                             args.batch or shape.global_batch, "train")
+
+    if args.simulate:
+        return simulate(cfg, shape, args)
 
     n_dev = len(jax.devices())
     if n_dev >= 512 and args.multi_pod:

@@ -1,2 +1,4 @@
 from repro.train.train_step import make_train_step, loss_fn
 from repro.train.trainer import Trainer
+from repro.train.cluster import (ClusterTimeModel, TrainCluster,
+                                 TRAIN_FABRICS, train_fabric)

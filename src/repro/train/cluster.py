@@ -1,0 +1,404 @@
+"""Simulated training cluster on the event-driven FabricRuntime.
+
+``TrainCluster`` runs N trainer nodes as runtime ``Process``es. Each
+global step is, per node:
+
+  compute phase       a simulated delay (roofline estimate, scaled by
+                      the node's inherent speed and its mitigation-
+                      adjusted work share);
+  gradient allreduce  concurrent Transfers on the node's host<->client
+                      path (device->host OUT, host->device IN) plus a
+                      ring exchange on the shared ``net`` path, closed
+                      by a ``runtime.barrier()`` — the data-parallel
+                      synchronization point;
+  checkpoint staging  on checkpoint steps, the node's checkpoint shard
+                      is staged over its SoC *or* host path *in the
+                      same ledger* as the gradient traffic, so
+                      checkpoint-vs-gradient contention and the §6.1
+                      host-load crossover (offload wins when the host
+                      direction is busy, loses when it is idle) emerge
+                      from scheduling instead of constants.
+
+The numeric side is optional and exact: when ``step_fn``/``params`` are
+given, the barrier release runs one *real* update per global step (data
+parallelism replicates state, so one numeric stream is the truth for
+every node) and ``CheckpointManager`` persists real bytes — which is
+what makes the post-failure loss curve bit-identical to an
+uninterrupted run. Without a ``step_fn`` the cluster is a timing-only
+dry run (``launch/train.py --simulate``).
+
+Fault tolerance is event-driven end to end: every node heartbeats via a
+periodic runtime process into a ``FaultToleranceManager`` attached to
+the same runtime; a silent node's watchdog fires a failure Signal in
+simulated time; the cluster then kills the survivor processes
+(cancelling their in-flight transfers — the ledger conserves), picks a
+survivor mesh with ``ft.elastic.best_mesh_for``, restores the newest
+committed checkpoint, and resumes the step loop with the smaller
+membership — fail -> detect -> resize -> resume, all on the SimClock.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import hw
+from repro.core.fabric import Fabric, OUT, IN, Path
+from repro.core.runtime import Barrier, FabricRuntime, Process, Transfer
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ft.elastic import best_mesh_for
+from repro.ft.manager import FaultToleranceManager
+from repro.ft.straggler import StragglerDetector
+
+SOC, HOST = "soc", "host"
+
+
+def train_fabric(nodes: int, *, host_bw: float = hw.PCIE_BW,
+                 soc_frac: float = 0.7,
+                 net_bw_per_node: float = hw.DCN_BW_PER_CHIP,
+                 concurrency_discount: float = 0.1) -> Fabric:
+    """The cluster fabric: per node a ``host:i`` path (the direct PCIe
+    host path, the paper's P) and a weaker ``soc:i`` offload path (the
+    SoC DMA engine, §3.3's ~0.7 P) sharing one interference group, plus
+    one switch-aggregated ``net`` path all ring traffic crosses."""
+    paths = []
+    for i in range(nodes):
+        paths.append(Path(f"host:{i}", host_bw, latency=hw.PCIE_LAT,
+                          kind="pcie", shared_group=f"pcie:{i}"))
+        paths.append(Path(f"soc:{i}", soc_frac * host_bw, latency=hw.PCIE_LAT,
+                          kind="pcie", shared_group=f"pcie:{i}"))
+    paths.append(Path("net", net_bw_per_node * nodes, latency=hw.DCN_LAT,
+                      kind="dcn", shared_group="net"))
+    return Fabric(paths, concurrency_discount=concurrency_discount)
+
+
+#: named fabrics for ``launch/train.py --simulate`` (and benches): the
+#: v5e-flavored default, a weaker SoC DMA engine, a fatter network, and
+#: the LineFS §5.1 testbed bandwidths (200 Gb net / 256 Gb internal).
+TRAIN_FABRICS: Dict[str, Callable[[int], Fabric]] = {
+    "v5e": lambda n: train_fabric(n),
+    "weak-soc": lambda n: train_fabric(n, soc_frac=0.4),
+    "fast-net": lambda n: train_fabric(
+        n, net_bw_per_node=4 * hw.DCN_BW_PER_CHIP),
+    "linefs": lambda n: train_fabric(
+        n, host_bw=256e9 / 8, net_bw_per_node=200e9 / 8),
+}
+
+
+@dataclass(frozen=True)
+class ClusterTimeModel:
+    """Per-step cost model for one simulated node."""
+    compute_s: float                 # roofline compute time per step
+    grad_bytes: float                # gradient bytes staged host<->device
+    ckpt_bytes: float = 0.0          # per-node checkpoint shard bytes
+    ckpt_path: str = SOC             # "soc" | "host" staging path
+    tokens_per_step: int = 0         # global tokens, for tokens/s
+
+    def __post_init__(self):
+        if self.ckpt_path not in (SOC, HOST):
+            raise ValueError(f"ckpt_path must be '{SOC}' or '{HOST}', "
+                             f"got {self.ckpt_path!r}")
+
+    @classmethod
+    def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
+                    ckpt_path: str = SOC, grad_dtype_bytes: int = 2,
+                    state_bytes_per_param: int = 10) -> "ClusterTimeModel":
+        """Roofline estimate from a model config + batch shape: compute
+        is 6*N*D over the cluster's peak FLOP/s; gradient staging is the
+        bf16 gradient buffer; the checkpoint shard is params + AdamW
+        moments split over the nodes."""
+        from repro.core.roofline import model_flops_for
+        tokens = shape.global_batch * shape.seq_len
+        flops = model_flops_for(cfg.active_param_count(), tokens, "train")
+        peak = hw.PEAK_FLOPS_BF16 * nodes * devices_per_node
+        n_params = cfg.param_count()
+        return cls(
+            compute_s=flops / peak,
+            grad_bytes=grad_dtype_bytes * n_params / nodes,
+            ckpt_bytes=state_bytes_per_param * n_params / nodes,
+            ckpt_path=ckpt_path,
+            tokens_per_step=tokens,
+        )
+
+
+@dataclass
+class ClusterNode:
+    name: str
+    index: int
+    devices: int = 8
+    alive: bool = True
+    compute_scale: float = 1.0       # inherent speed (a slow node > 1)
+    share_scale: float = 1.0         # mitigation-adjusted work share
+    proc: Optional[Process] = None
+    hb_proc: Optional[Process] = None
+    inflight: List[Transfer] = field(default_factory=list)
+
+
+class TrainCluster:
+    """N simulated trainer nodes stepping in lockstep on one runtime.
+
+    ``step_fn(params, opt_state, batch, step) -> (params, opt_state,
+    metrics)`` + ``batch_at(step)`` drive the optional numeric stream;
+    ``ckpt`` persists it (real checkpoints, real restore after a
+    simulated failure). ``fail_at=(node_name, step)`` silences a node
+    at the start of that step; detection, elastic resize and resume
+    then happen in simulated time.
+    """
+
+    def __init__(self, nodes: int, time_model: ClusterTimeModel, *,
+                 fabric: Optional[Fabric] = None,
+                 runtime: Optional[FabricRuntime] = None,
+                 step_fn: Optional[Callable] = None,
+                 params: Any = None, opt_state: Any = None,
+                 batch_at: Optional[Callable[[int], Any]] = None,
+                 ckpt: Optional[CheckpointManager] = None,
+                 ckpt_every: Optional[int] = None,
+                 devices_per_node: int = 8,
+                 model_axis: int = 1,
+                 heartbeat_every: float = 0.5,
+                 heartbeat_timeout: float = 2.0,
+                 node_compute_scale: Optional[Dict[str, float]] = None,
+                 host_load: Optional[Dict[str, float]] = None,
+                 mitigate_stragglers: bool = False,
+                 fail_at: Optional[Tuple[str, int]] = None):
+        if nodes < 1:
+            raise ValueError("cluster needs at least one node")
+        self.tm = time_model
+        self.fabric = fabric if fabric is not None else train_fabric(nodes)
+        self.runtime = runtime if runtime is not None \
+            else FabricRuntime(self.fabric)
+        self.step_fn = step_fn
+        self.params, self.opt_state = params, opt_state
+        self.batch_at = batch_at
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every if ckpt_every is not None \
+            else (ckpt.every if ckpt is not None else 0)
+        self.model_axis = model_axis
+        self.heartbeat_every = heartbeat_every
+        self.heartbeat_timeout = heartbeat_timeout
+        self.mitigate_stragglers = mitigate_stragglers
+        self.fail_at = fail_at
+        self.straggler = StragglerDetector()
+        self.ft = FaultToleranceManager(ckpt, timeout=heartbeat_timeout,
+                                        runtime=self.runtime)
+        self.nodes: List[ClusterNode] = [
+            ClusterNode(f"node{i}", i, devices=devices_per_node)
+            for i in range(nodes)]
+        names = {n.name: n for n in self.nodes}
+        for bad in set(node_compute_scale or ()) | set(host_load or ()):
+            if bad not in names:
+                raise ValueError(f"unknown node {bad!r} "
+                                 f"(cluster has {sorted(names)})")
+        if fail_at is not None and fail_at[0] not in names:
+            raise ValueError(f"fail_at names unknown node {fail_at[0]!r} "
+                             f"(cluster has {sorted(names)})")
+        for n in self.nodes:
+            n.compute_scale = (node_compute_scale or {}).get(n.name, 1.0)
+        for name, frac in (host_load or {}).items():
+            # a load at/above the discounted capacity stalls the node's
+            # gradient flow at rate 0 forever: the clock never drains
+            limit = 1.0 - self.fabric.concurrency_discount
+            if not 0.0 <= frac < limit:
+                raise ValueError(
+                    f"host_load[{name!r}]={frac} must be in [0, {limit}) — "
+                    "at or above 1 - concurrency_discount the node's own "
+                    "traffic would stall forever")
+            i = names[name].index
+            cap = self.fabric[f"host:{i}"].capacity
+            self.runtime.ledger.reserve(f"host:{i}", out=frac * cap,
+                                        in_=frac * cap,
+                                        flow=f"hostload:{name}")
+        self.start_step = 0
+        self.history: List[dict] = []
+        self.events: List[dict] = []
+        self.mesh_shape: Tuple[int, ...] = ()
+        self._barrier: Optional[Barrier] = None
+        self._step = 0
+        self._end = 0
+        self._step_start = 0.0
+        if ckpt is not None and step_fn is not None \
+                and ckpt.latest_step() is not None:
+            (self.params, self.opt_state), k = ckpt.restore(
+                (self.params, self.opt_state))
+            self.start_step = k + 1
+
+    # -- membership ------------------------------------------------------
+    def _live(self) -> List[ClusterNode]:
+        return [n for n in self.nodes if n.alive]
+
+    def _ckpt_step(self, step: int) -> bool:
+        return (self.tm.ckpt_bytes > 0 and self.ckpt_every > 0
+                and step % self.ckpt_every == 0)
+
+    # -- the per-node step loop -----------------------------------------
+    def _node_proc(self, node: ClusterNode):
+        rt, tm = self.runtime, self.tm
+        while node.alive and self._step < self._end:
+            step = self._step
+            if self.fail_at is not None and node.name == self.fail_at[0] \
+                    and step >= self.fail_at[1]:
+                node.alive = False            # goes silent: no barrier, no
+                if node.hb_proc is not None:  # heartbeat -> watchdog fires
+                    node.hb_proc.kill()
+                self.events.append({"t": rt.clock.now, "event": "node_silent",
+                                    "node": node.name, "step": step})
+                return
+            t0 = rt.clock.now
+            node.inflight = [t for t in node.inflight if not t.done]
+            ck = None
+            if self._ckpt_step(step):
+                ck = rt.transfer(f"{tm.ckpt_path}:{node.index}",
+                                 tm.ckpt_bytes, direction=OUT,
+                                 flow=f"ckpt:{node.name}")
+                node.inflight.append(ck)
+            yield tm.compute_s * node.compute_scale * node.share_scale
+            if tm.grad_bytes > 0:
+                # sample external host-direction occupancy *before* our
+                # own gradient flow joins the path (detector input)
+                self.straggler.observe_ledger(
+                    node.name, rt.ledger, f"host:{node.index}")
+                out = rt.transfer(f"host:{node.index}", tm.grad_bytes,
+                                  direction=OUT, flow=f"grad:{node.name}")
+                node.inflight.append(out)
+                yield out
+                live = max(len(self._live()), 1)
+                ring = 2.0 * (live - 1) / live * tm.grad_bytes
+                if ring > 0:
+                    rx = rt.transfer("net", ring, flow=f"ring:{node.name}")
+                    node.inflight.append(rx)
+                    yield rx
+                back = rt.transfer(f"host:{node.index}", tm.grad_bytes,
+                                   direction=IN, flow=f"grad:{node.name}")
+                node.inflight.append(back)
+                yield back
+            if ck is not None:
+                yield ck                      # staging is on the step path
+            self.straggler.observe(node.name, rt.clock.now - t0)
+            yield self._barrier.arrive()
+
+    def _heartbeat(self, node: ClusterNode) -> None:
+        if node.alive:
+            self.ft.heartbeat(node.name)
+
+    # -- global-step bookkeeping (barrier release) -----------------------
+    def _on_step_complete(self, _generation: int) -> None:
+        step = self._step
+        now = self.runtime.clock.now
+        rec = {"step": step, "sim_t": now,
+               "sim_seconds": now - self._step_start,
+               "nodes": len(self._live())}
+        if self.tm.tokens_per_step and rec["sim_seconds"] > 0:
+            rec["tokens_per_s"] = self.tm.tokens_per_step / rec["sim_seconds"]
+        if self.step_fn is not None:
+            import jax.numpy as jnp
+            batch = self.batch_at(step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, jnp.asarray(step))
+            rec.update({k: float(v) for k, v in metrics.items()})
+            if self.ckpt is not None and self._ckpt_step(step):
+                self.ckpt.save(step, (self.params, self.opt_state),
+                               blocking=True)
+        if self.mitigate_stragglers and self.straggler.stragglers():
+            live = self._live()
+            shares = self.straggler.rebalanced_shares(8 * len(live))
+            for n in live:
+                n.share_scale = shares.get(n.name, 8) / 8.0
+        self.history.append(rec)
+        self._step = step + 1
+        self._step_start = now
+
+    # -- failure handling ------------------------------------------------
+    def _failure_watch(self):
+        while True:
+            yield self.ft.failed
+            # drain the queue, not just the fired value: two watchdogs
+            # expiring at the same instant fire the Signal twice, but
+            # only the first fire finds a registered waiter
+            while self.ft.pending_failures:
+                self._handle_failure(self.ft.pending_failures.pop(0))
+
+    def _handle_failure(self, name: str) -> None:
+        now = self.runtime.clock.now
+        self.events.append({"t": now, "event": "failure_detected",
+                            "node": name, "step": self._step})
+        # quiesce: kill every step process and cancel in-flight transfers
+        for n in self.nodes:
+            if n.proc is not None:
+                n.proc.kill()
+            for t in n.inflight:
+                if not t.done:
+                    self.runtime.cancel(t)
+            n.inflight = []
+            if n.name == name:
+                n.alive = False
+                if n.hb_proc is not None:
+                    n.hb_proc.kill()
+        survivors = self._live()
+        if not survivors:
+            raise RuntimeError("no survivors after failure of " + name)
+        shape, axes = best_mesh_for(sum(n.devices for n in survivors),
+                                    model=self.model_axis)
+        self.mesh_shape = shape
+        resume = self._step
+        if self.ckpt is not None and self.step_fn is not None:
+            (self.params, self.opt_state), k = self.ckpt.restore(
+                (self.params, self.opt_state))
+            resume = k + 1
+            self.history = [h for h in self.history if h["step"] < resume]
+        self.events.append({"t": now, "event": "elastic_resize",
+                            "nodes": len(survivors), "mesh": shape,
+                            "axes": axes, "resume_step": resume})
+        self._step = resume
+        self._step_start = now
+        self._spawn(survivors)
+
+    # -- lifecycle -------------------------------------------------------
+    def _spawn(self, members: List[ClusterNode]) -> None:
+        self._barrier = self.runtime.barrier(
+            len(members), on_release=self._on_step_complete, name="allreduce")
+        for n in members:
+            n.proc = self.runtime.process(self._node_proc(n),
+                                          name=f"step:{n.name}")
+
+    def run(self, num_steps: int) -> dict:
+        """Advance ``num_steps`` global steps in simulated time. Returns
+        a summary (simulated seconds, tokens/s, events)."""
+        rt = self.runtime
+        t0 = rt.clock.now
+        self._step = self.start_step
+        self._end = self.start_step + num_steps
+        self._step_start = t0
+        for n in self._live():
+            if n.name not in self.ft.nodes:
+                self.ft.register(n.name, devices=n.devices)
+            if n.hb_proc is None or n.hb_proc.done:
+                n.hb_proc = rt.every(self.heartbeat_every,
+                                     lambda n=n: self._heartbeat(n),
+                                     name=f"hb:{n.name}", start_delay=0.0)
+        watch = rt.process(self._failure_watch(), name="failure-watch")
+        self._spawn(self._live())
+        rt.clock.run(stop=lambda: all(
+            n.proc is None or n.proc.done for n in self._live()))
+        # tear down the periodic machinery so the heap can drain
+        watch.kill()
+        for n in self.nodes:
+            if n.hb_proc is not None:
+                n.hb_proc.kill()
+                n.hb_proc = None
+        self.ft.disarm()
+        first = self._end - num_steps
+        self.start_step = self._step
+        elapsed = rt.clock.now - t0
+        summary = {
+            "steps": self._step - first,    # completed by *this* call
+            "sim_seconds": elapsed,
+            "nodes": len(self._live()),
+            "mesh": self.mesh_shape,
+            "events": list(self.events),
+        }
+        if self.tm.tokens_per_step and elapsed > 0:
+            summary["tokens_per_s"] = \
+                self.tm.tokens_per_step * num_steps / elapsed
+        if self.history and "loss" in self.history[-1]:
+            summary["loss"] = self.history[-1]["loss"]
+        return summary

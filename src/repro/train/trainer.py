@@ -4,6 +4,19 @@ Production shape: deterministic resumable pipeline, async replicated
 checkpoints, straggler bookkeeping, failure-driven restart. The loop is
 mesh-agnostic — launch/train.py owns jit/shardings and hands in the
 compiled step.
+
+Two timing modes:
+
+- wall clock (default): each step is timed with ``time.monotonic`` —
+  the original behaviour, preserved byte for byte.
+- runtime (``runtime=`` a ``FabricRuntime`` + ``time_model=`` a
+  ``ClusterTimeModel``): every step *also* advances simulated time —
+  the roofline compute delay plus the gradient staging transfers on
+  the node's host path (and checkpoint staging on the configured
+  SoC/host path on checkpoint steps), all charged against the shared
+  ledger. Step records then carry ``sim_seconds`` and ``tokens_per_s``
+  so a config can be throughput-profiled on a fabric without TPU time.
+  The numeric stream is identical in both modes.
 """
 from __future__ import annotations
 
@@ -28,7 +41,11 @@ class Trainer:
                  params: Any, opt_state: Any,
                  put_batch: Optional[Callable] = None,
                  ckpt: Optional[CheckpointManager] = None,
-                 log_path: Optional[str] = None):
+                 log_path: Optional[str] = None,
+                 node_name: str = "self",
+                 runtime=None,                 # FabricRuntime (simulated time)
+                 time_model=None,              # ClusterTimeModel
+                 node_index: int = 0):
         self.cfg, self.run, self.shape = cfg, run, shape
         self.step_fn = step_fn
         self.params, self.opt_state = params, opt_state
@@ -37,6 +54,14 @@ class Trainer:
         self.ckpt = ckpt
         self.straggler = StragglerDetector()
         self.log_path = log_path
+        self.node_name = node_name
+        self.node_index = node_index
+        self.time_model = time_model
+        if runtime is None and time_model is not None:
+            from repro.train.cluster import train_fabric
+            from repro.core.runtime import FabricRuntime
+            runtime = FabricRuntime(train_fabric(1))
+        self.runtime = runtime
         self.history: list = []
         self.start_step = 0
         if ckpt is not None and ckpt.latest_step() is not None:
@@ -50,11 +75,50 @@ class Trainer:
             with open(self.log_path, "a") as f:
                 f.write(json.dumps(rec) + "\n")
 
+    # -- simulated step timing (runtime mode) ---------------------------
+    def _simulate_step(self, step: int) -> float:
+        """One step's simulated duration: compute + gradient staging on
+        the node's host path, checkpoint staging overlapped on the
+        configured path. Single-node by construction — no ring exchange
+        and no barrier, unlike a TrainCluster node step; multi-node
+        callers want TrainCluster, not N Trainers."""
+        from repro.core.fabric import IN, OUT
+        rt, tm, i = self.runtime, self.time_model, self.node_index
+        t0 = rt.clock.now
+        will_ckpt = (tm.ckpt_bytes > 0 and self.ckpt is not None
+                     and self.ckpt.every > 0 and step % self.ckpt.every == 0)
+        finished = []
+
+        def one_step():
+            ck = None
+            if will_ckpt:
+                ck = rt.transfer(f"{tm.ckpt_path}:{i}", tm.ckpt_bytes,
+                                 direction=OUT, flow=f"ckpt:{self.node_name}")
+            yield tm.compute_s
+            if tm.grad_bytes > 0:
+                self.straggler.observe_ledger(self.node_name, rt.ledger,
+                                              f"host:{i}")
+                yield rt.transfer(f"host:{i}", tm.grad_bytes, direction=OUT,
+                                  flow=f"grad:{self.node_name}")
+                yield rt.transfer(f"host:{i}", tm.grad_bytes, direction=IN,
+                                  flow=f"grad:{self.node_name}")
+            if ck is not None:
+                yield ck
+            finished.append(True)
+
+        rt.process(one_step(), name=f"step:{self.node_name}")
+        rt.clock.run(stop=lambda: bool(finished))
+        return rt.clock.now - t0
+
     def run_steps(self, num_steps: int, *, fail_at: Optional[int] = None) -> Dict:
         """Run `num_steps` from start_step. `fail_at` raises a simulated
         node failure at that step (tests drive recovery through ft/)."""
         step = self.start_step
         end = self.start_step + num_steps
+        tokens_per_step = (self.time_model.tokens_per_step
+                           if self.time_model is not None
+                           and self.time_model.tokens_per_step
+                           else self.shape.global_batch * self.shape.seq_len)
         while step < end:
             if fail_at is not None and step == fail_at:
                 raise RuntimeError(f"simulated node failure at step {step}")
@@ -64,8 +128,15 @@ class Trainer:
                 self.params, self.opt_state, batch, jnp.asarray(step))
             metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.monotonic() - t0
-            self.straggler.observe("self", dt)
             rec = {"step": step, "seconds": dt, **metrics}
+            if self.runtime is not None and self.time_model is not None:
+                sim_dt = self._simulate_step(step)
+                rec["sim_seconds"] = sim_dt
+                if sim_dt > 0:
+                    rec["tokens_per_s"] = tokens_per_step / sim_dt
+                self.straggler.observe(self.node_name, sim_dt)
+            else:
+                self.straggler.observe(self.node_name, dt)
             self._log(rec)
             if self.ckpt is not None:
                 self.ckpt.maybe_save(step, (self.params, self.opt_state))

@@ -92,6 +92,70 @@ def test_elastic_mesh_choice():
     assert np.prod(shape) <= 248 and shape[-1] <= 16
 
 
+def test_elastic_mesh_edge_cases():
+    # single device: everything degrades to a 1x1 data/model mesh
+    assert best_mesh_for(1, model=16) == ((1, 1), ("data", "model"))
+    # prime device count: TP shrinks to 1, all devices go to data
+    assert best_mesh_for(7, model=4) == ((7, 1), ("data", "model"))
+    # device count not divisible by the TP degree: TP halves until it fits
+    shape, names = best_mesh_for(12, model=8)
+    assert shape == (3, 4) and names == ("data", "model")
+    # never over-commits: the mesh always fits the surviving devices
+    for devices in (1, 2, 3, 5, 6, 9, 11, 24, 100):
+        shape, _ = best_mesh_for(devices, model=16)
+        assert 1 <= np.prod(shape) <= devices
+
+
+def test_reshard_round_trip_preserves_values():
+    import jax.numpy as jnp
+    from repro.ft.elastic import make_mesh, reshard
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
+            "b": jnp.ones((4,), jnp.float32)}
+    logical = {"w": ("fsdp", "mlp"), "b": ("embed",)}
+    shape, names = best_mesh_for(len(jax.devices()), model=1)
+    mesh = make_mesh(shape, names)
+    out = reshard(tree, logical, mesh)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert jnp.array_equal(a, b)
+
+
+def test_ft_event_driven_timeout_on_runtime():
+    """Runtime mode: a silent node's watchdog fires the failure Signal
+    in simulated time, with no polling; a heartbeating node survives."""
+    from repro.core.fabric import Fabric, Path
+    from repro.core.runtime import FabricRuntime
+    rt = FabricRuntime(Fabric.of(Path("p", 1.0)))
+    ft = FaultToleranceManager(None, timeout=1.0, runtime=rt)
+    ft.register("steady", devices=4)
+    ft.register("silent", devices=4)
+    fired = []
+    ft.failed.wait(lambda name: fired.append((name, rt.clock.now)))
+    hb = rt.every(0.4, lambda: ft.heartbeat("steady"), start_delay=0.0)
+    rt.clock.run(until=3.0)
+    assert [n for n, _ in fired] == ["silent"]
+    assert fired[0][1] == pytest.approx(1.0)
+    assert ft.nodes["steady"].alive and not ft.nodes["silent"].alive
+    assert ft.alive_devices() == 4
+    hb.kill()
+    ft.disarm()
+
+
+def test_ft_simultaneous_timeouts_queue_every_failure():
+    """Two watchdogs expiring at the same instant: Signal.fire drops a
+    value when no waiter is registered, so the queue must carry both."""
+    from repro.core.fabric import Fabric, Path
+    from repro.core.runtime import FabricRuntime
+    rt = FabricRuntime(Fabric.of(Path("p", 1.0)))
+    ft = FaultToleranceManager(None, timeout=1.0, runtime=rt)
+    ft.register("a", devices=2)
+    ft.register("b", devices=2)            # same instant, same expiry
+    rt.clock.run(until=2.0)
+    assert sorted(ft.pending_failures) == ["a", "b"]
+    assert not ft.nodes["a"].alive and not ft.nodes["b"].alive
+    assert ft.alive_devices() == 0
+
+
 def test_straggler_detection_and_rebalance():
     det = StragglerDetector(threshold=1.5)
     for _ in range(5):

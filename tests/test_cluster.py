@@ -1,0 +1,328 @@
+"""TrainCluster on the FabricRuntime — the ISSUE 4 acceptance assertions:
+
+  (a) checkpoint traffic scheduled on the SoC paths degrades step time
+      less than host-path staging when the host direction is busy, and
+      the ordering flips when the fabric is idle (the §6.1 crossover);
+  (b) a simulated node failure triggers detect -> elastic resize ->
+      checkpoint resume with the loss curve bit-identical to an
+      uninterrupted run at the same steps;
+  (c) ledger conservation holds across barrier/cancel under the new
+      runtime primitives.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fabric import Fabric, OUT, IN, Path
+from repro.core.runtime import FabricRuntime
+from repro.train.cluster import (ClusterTimeModel, TRAIN_FABRICS,
+                                 TrainCluster, train_fabric)
+
+
+# ----------------------------------------------------------------------
+# new runtime primitives: barrier, cancel, kill, periodic
+# ----------------------------------------------------------------------
+
+def test_barrier_rendezvous_and_cycles():
+    rt = FabricRuntime(Fabric.of(Path("p", 10.0)))
+    log = []
+    bar = rt.barrier(3, on_release=lambda gen: log.append(("release", gen)))
+
+    def party(i, delay):
+        yield delay
+        yield bar.arrive()
+        log.append((i, rt.clock.now))
+        yield bar.arrive()                 # cyclic: second generation
+        log.append((i, rt.clock.now))
+
+    for i, d in enumerate((0.1, 0.5, 0.3)):
+        rt.process(party(i, d))
+    rt.clock.run()
+    # everyone resumes at the last arrival time of each generation
+    assert log[0] == ("release", 1)
+    assert {e for e in log[1:4]} == {(0, 0.5), (1, 0.5), (2, 0.5)}
+    assert log[4] == ("release", 2)
+    assert all(t == 0.5 for _, t in log[5:])
+    assert bar.generation == 2
+
+
+def test_barrier_remove_party_releases_waiters():
+    rt = FabricRuntime(Fabric.of(Path("p", 10.0)))
+    bar = rt.barrier(3)
+    woke = []
+
+    def party(i):
+        yield bar.arrive()
+        woke.append(i)
+
+    rt.process(party(0))
+    rt.process(party(1))
+    rt.clock.run()
+    assert woke == []                      # 2 of 3 arrived: still waiting
+    bar.remove_party()                     # the third party died
+    rt.clock.run()
+    assert sorted(woke) == [0, 1]
+
+
+def test_cancel_transfer_conserves_ledger_and_rebalances():
+    cap = 100.0
+    rt = FabricRuntime(Fabric.of(Path("link", cap)))
+    t1 = rt.transfer("link", 100.0)
+    t2 = rt.transfer("link", 100.0)
+    rt.clock.schedule(0.5, lambda: rt.cancel(t1))
+    rt.clock.run()
+    assert t1.canceled and t1.done and t1.remaining > 0
+    # t1 progressed 25 (shared rate 50) before the cancel
+    assert t1.remaining == pytest.approx(75.0)
+    # t2: 0.5s at 50/s, then full rate for the rest
+    assert t2.finished_at == pytest.approx(0.5 + 75.0 / cap)
+    assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_cancel_during_latency_phase_never_occupies():
+    rt = FabricRuntime(Fabric.of(Path("lagged", 10.0, latency=1.0)))
+    t = rt.transfer("lagged", 5.0)
+    rt.clock.schedule(0.5, lambda: rt.cancel(t))
+    rt.clock.run()
+    assert t.canceled and t.remaining == 5.0
+    assert rt.ledger.reserved("lagged", OUT) == pytest.approx(0.0, abs=1e-9)
+    assert rt.active_transfers() == []
+
+
+def test_process_kill_cancels_inflight_transfer():
+    rt = FabricRuntime(Fabric.of(Path("p", 10.0)))
+    seen = {}
+
+    def worker():
+        yield rt.transfer("p", 100.0, flow="w")
+        seen["finished"] = True            # must never run
+
+    proc = rt.process(worker())
+    rt.clock.schedule(1.0, proc.kill)
+    rt.clock.run()
+    assert proc.done and proc.killed and "finished" not in seen
+    assert rt.ledger.reserved("p", OUT) == pytest.approx(0.0, abs=1e-9)
+    assert rt.active_transfers() == []
+
+
+def test_periodic_process_fires_until_killed():
+    rt = FabricRuntime(Fabric.of(Path("p", 10.0)))
+    ticks = []
+    proc = rt.every(0.25, lambda: ticks.append(rt.clock.now), start_delay=0.0)
+    rt.clock.schedule(1.1, proc.kill)
+    rt.clock.run()
+    assert ticks == pytest.approx([0.0, 0.25, 0.5, 0.75, 1.0])
+
+
+# ----------------------------------------------------------------------
+# (a) the §6.1 crossover
+# ----------------------------------------------------------------------
+
+def _step_time(grad_bytes, ckpt_path, ckpt_bytes=8e9, steps=6):
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=grad_bytes,
+                          ckpt_bytes=ckpt_bytes, ckpt_path=ckpt_path)
+    cluster = TrainCluster(2, tm, ckpt_every=2)
+    return cluster.run(steps)["sim_seconds"] / steps
+
+
+def test_ckpt_staging_crossover_busy_vs_idle():
+    busy, idle = 8e9, 1e6
+    base_busy = _step_time(busy, "soc", ckpt_bytes=0.0)
+    base_idle = _step_time(idle, "soc", ckpt_bytes=0.0)
+    # host direction busy with gradient traffic: SoC staging degrades
+    # the step less than host staging (LineFS keeps its win)
+    soc_busy = _step_time(busy, "soc") - base_busy
+    host_busy = _step_time(busy, "host") - base_busy
+    assert soc_busy < host_busy, (soc_busy, host_busy)
+    # idle fabric: the faster host path wins and the ordering flips
+    # (LineFS loses its win when the host is free, §6.1)
+    soc_idle = _step_time(idle, "soc") - base_idle
+    host_idle = _step_time(idle, "host") - base_idle
+    assert host_idle < soc_idle, (host_idle, soc_idle)
+
+
+def test_ckpt_contention_emerges_from_shared_ledger():
+    """Host-path staging shares the gradient direction budget; the
+    degradation it causes exceeds the SoC path's by more than the
+    concurrency discount alone could explain."""
+    busy = 8e9
+    base = _step_time(busy, "soc", ckpt_bytes=0.0)
+    soc = _step_time(busy, "soc")
+    host = _step_time(busy, "host")
+    assert host > soc > base
+    # host staging at least doubles the damage of soc staging
+    assert (host - base) > 2 * (soc - base)
+
+
+def test_external_host_load_slows_only_the_loaded_node():
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=2e9)
+    cluster = TrainCluster(3, tm, host_load={"node1": 0.7})
+    cluster.run(4)
+    det = cluster.straggler
+    assert det.occupancy["node1"] > 0.5
+    assert det.occupancy["node0"] < 0.2
+    assert "node1" in det.stragglers()
+    # the loaded node's observed step time is the worst of the fleet
+    assert det.ema["node1"] > det.ema["node0"]
+
+
+def test_named_fabrics_and_time_model_from_config():
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    cfg = get_config("internlm2-1.8b").reduced()
+    shape = ShapeConfig("t", 128, 8, "train")
+    for name, build in TRAIN_FABRICS.items():
+        fab = build(2)
+        assert "host:0" in fab and "soc:1" in fab and "net" in fab
+    tm = ClusterTimeModel.from_config(cfg, shape, nodes=2)
+    assert tm.compute_s > 0 and tm.grad_bytes > 0 and tm.ckpt_bytes > 0
+    assert tm.tokens_per_step == 128 * 8
+    with pytest.raises(ValueError):
+        ClusterTimeModel(compute_s=1.0, grad_bytes=0.0, ckpt_path="nvme")
+
+
+# ----------------------------------------------------------------------
+# (b) fail -> detect -> resize -> resume, bit-identical losses
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def numeric_pieces():
+    from repro.configs import RunConfig, get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.params import init_params
+    from repro.train.train_step import make_train_step
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=3e-3, warmup_steps=2, total_steps=12)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    pipeline = TokenPipeline(cfg, shape, seed=0)
+    return cfg, step_fn, pipeline
+
+
+def _numeric_cluster(pieces, ckpt_dir, fail_at):
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.models.params import init_params
+    from repro.optim.adamw import adamw_init
+    cfg, step_fn, pipeline = pieces
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e8, ckpt_bytes=1e8,
+                          tokens_per_step=4 * 32)
+    return TrainCluster(
+        3, tm, step_fn=step_fn, params=params, opt_state=adamw_init(params),
+        batch_at=pipeline.batch_at,
+        ckpt=CheckpointManager(str(ckpt_dir), every=4, keep=3),
+        heartbeat_every=0.2, heartbeat_timeout=1.0, fail_at=fail_at)
+
+
+def test_failure_detect_resize_resume_bit_identical(tmp_path, numeric_pieces):
+    ref = _numeric_cluster(numeric_pieces, tmp_path / "ref", None)
+    ref.run(10)
+    fl = _numeric_cluster(numeric_pieces, tmp_path / "fl", ("node2", 6))
+    summary = fl.run(10)
+
+    kinds = [e["event"] for e in summary["events"]]
+    assert kinds == ["node_silent", "failure_detected", "elastic_resize"]
+    silent = summary["events"][0]
+    detect = summary["events"][1]
+    resize = summary["events"][2]
+    # detection is event-driven in simulated time: one timeout after the
+    # node's *last heartbeat*, which lands within one heartbeat interval
+    # before it went silent
+    assert silent["t"] + 1.0 - 0.2 - 1e-6 <= detect["t"] \
+        <= silent["t"] + 1.0 + 1e-6
+    assert resize["nodes"] == 2
+    assert resize["mesh"] == (2, 8, 1)     # best_mesh_for(16 devices)
+    assert resize["resume_step"] == 5      # last ckpt at 4 -> resume at 5
+    assert summary["nodes"] == 2
+
+    # the loss curve is bit-identical to the uninterrupted run
+    ref_losses = {h["step"]: h["loss"] for h in ref.history}
+    fl_losses = {h["step"]: h["loss"] for h in fl.history}
+    assert sorted(fl_losses) == sorted(ref_losses) == list(range(10))
+    for k in ref_losses:
+        assert fl_losses[k] == ref_losses[k], k
+
+    # the failure run paid for the re-run steps in simulated time
+    assert summary["sim_seconds"] > ref.runtime.clock.now
+
+
+def test_simulated_tokens_per_s_accounts_for_lost_work(tmp_path,
+                                                       numeric_pieces):
+    ref = _numeric_cluster(numeric_pieces, tmp_path / "a", None)
+    s_ref = ref.run(10)
+    fl = _numeric_cluster(numeric_pieces, tmp_path / "b", ("node1", 6))
+    s_fl = fl.run(10)
+    assert s_fl["tokens_per_s"] < s_ref["tokens_per_s"]
+
+
+# ----------------------------------------------------------------------
+# (c) ledger conservation across barrier/cancel
+# ----------------------------------------------------------------------
+
+def _assert_clean_ledger(cluster, external_flows=()):
+    led = cluster.runtime.ledger
+    for name in cluster.fabric:
+        for direction in (OUT, IN):
+            reserved = led.reserved(name, direction)
+            external = sum(
+                (o if direction == OUT else i)
+                for (flow, pname), (o, i) in led._by_flow.items()
+                if pname == name and flow in external_flows)
+            assert reserved == pytest.approx(external, abs=1e-6), \
+                (name, direction, reserved, external)
+    # and nothing but external flows still holds anything
+    leftover = {flow for (flow, _), (o, i) in led._by_flow.items()
+                if (o > 0 or i > 0) and flow not in external_flows}
+    assert not leftover, leftover
+
+
+def test_ledger_conserves_through_barrier_steps():
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=4e9, ckpt_bytes=4e9)
+    cluster = TrainCluster(3, tm, ckpt_every=2)
+    cluster.run(6)
+    _assert_clean_ledger(cluster)
+
+
+def test_ledger_conserves_through_failure_and_cancel(tmp_path):
+    """A mid-run kill cancels in-flight transfers; everything those
+    flows reserved must be back in the ledger, while the external
+    host-load reservation survives untouched."""
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=4e9, ckpt_bytes=4e9)
+    cluster = TrainCluster(
+        3, tm, ckpt_every=2, host_load={"node0": 0.3},
+        heartbeat_every=0.2, heartbeat_timeout=1.0, fail_at=("node2", 3))
+    summary = cluster.run(6)
+    assert any(e["event"] == "elastic_resize" for e in summary["events"])
+    _assert_clean_ledger(cluster, external_flows={"hostload:node0"})
+    hl = cluster.fabric["host:0"].capacity * 0.3
+    assert cluster.runtime.ledger.reserved("host:0", OUT) == pytest.approx(hl)
+
+
+def test_cluster_runs_are_chainable():
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=1e9)
+    cluster = TrainCluster(2, tm)
+    s1 = cluster.run(3)
+    assert cluster.start_step == 3 and s1["steps"] == 3
+    s2 = cluster.run(2)
+    assert cluster.start_step == 5
+    assert s2["steps"] == 2               # this call, not cumulative
+    steps = [h["step"] for h in cluster.history]
+    assert steps == list(range(5))
+    _assert_clean_ledger(cluster)
+
+
+def test_cluster_validates_host_load_and_node_names():
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=1e9)
+    # a load at/above 1 - discount would stall the node's gradient flow
+    # at rate 0 forever (the clock would never drain) -> refused upfront
+    with pytest.raises(ValueError, match="stall"):
+        TrainCluster(2, tm, host_load={"node0": 0.95})
+    with pytest.raises(ValueError, match="unknown node"):
+        TrainCluster(2, tm, host_load={"node7": 0.5})
+    with pytest.raises(ValueError, match="unknown node"):
+        TrainCluster(2, tm, fail_at=("node9", 3))
+    with pytest.raises(ValueError, match="unknown node"):
+        TrainCluster(2, tm, node_compute_scale={"nodeX": 2.0})

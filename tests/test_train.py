@@ -102,3 +102,80 @@ def test_pipeline_deterministic_and_resumable():
     assert not np.array_equal(p1.batch_at(17)["tokens"], p1.batch_at(18)["tokens"])
     # next-token alignment
     assert np.array_equal(b1["labels"][:, :-1][:, :1], b1["tokens"][:, 1:2]) or True
+
+
+def test_pipeline_memmap_dtype_sniffing(tmp_path):
+    """Regression: _memmap_tokens hardcoded uint16 while the docstring
+    promised uint16/uint32 — a uint32 token file read as uint16 returns
+    garbage. Explicit dtype=, extension sniffing, and the vocab-size
+    default must all deliver the file's real values."""
+    from repro.data.pipeline import TokenPipeline
+    cfg = get_config("internlm2-1.8b").reduced()
+    shape = ShapeConfig("t", 16, 2, "train")
+    rng = np.random.default_rng(0)
+    toks32 = rng.integers(60_000, 90_000, size=4096).astype(np.uint32)
+
+    f32 = tmp_path / "tokens.bin"
+    toks32.tofile(f32)
+    p = TokenPipeline(cfg, shape, seed=1, data_path=str(f32),
+                      dtype=np.uint32)
+    batch = p.batch_at(0)
+    assert batch["tokens"].max() > np.iinfo(np.uint16).max
+    assert set(np.unique(batch["tokens"])) <= set(toks32.tolist())
+
+    # extension sniffing: .u32 needs no dtype argument
+    fext = tmp_path / "tokens.u32"
+    toks32.tofile(fext)
+    p_ext = TokenPipeline(cfg, shape, seed=1, data_path=str(fext))
+    assert np.array_equal(p_ext.batch_at(0)["tokens"], batch["tokens"])
+
+    # uint16 files still read exactly (the old default, now explicit)
+    toks16 = rng.integers(0, 1000, size=4096).astype(np.uint16)
+    f16 = tmp_path / "tokens.u16"
+    toks16.tofile(f16)
+    p16 = TokenPipeline(cfg, shape, seed=1, data_path=str(f16))
+    b16 = p16.batch_at(0)
+    assert set(np.unique(b16["tokens"])) <= set(toks16.tolist())
+
+    with pytest.raises(ValueError):
+        TokenPipeline(cfg, shape, data_path=str(f32), dtype=np.int64)
+
+
+def test_trainer_runtime_mode_logs_simulated_tokens():
+    """runtime= mode: records carry sim_seconds/tokens_per_s from the
+    fabric timeline while the wall-clock fields are preserved, and the
+    straggler series is keyed by node_name."""
+    from repro.train.cluster import ClusterTimeModel
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=1e9)
+    tr = Trainer(cfg, run, shape, step_fn=step_fn, params=params,
+                 opt_state=adamw_init(params), node_name="host3",
+                 time_model=tm)
+    tr.run_steps(3)
+    for rec in tr.history:
+        assert rec["seconds"] > 0                    # wall clock preserved
+        # compute + out/in gradient staging at PCIe bandwidth + latency
+        expect = 0.01 + 2 * (1e9 / 16e9 + 3e-6)
+        assert rec["sim_seconds"] == pytest.approx(expect, rel=1e-3)
+        assert rec["tokens_per_s"] == pytest.approx(
+            4 * 32 / rec["sim_seconds"])
+    assert list(tr.straggler.ema) == ["host3"]
+
+
+def test_trainer_wall_clock_mode_unchanged():
+    """Without runtime=, behaviour is the original: wall-clock seconds
+    only, straggler series under the default node name."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    tr = Trainer(cfg, run, shape, step_fn=step_fn, params=params,
+                 opt_state=adamw_init(params))
+    tr.run_steps(2)
+    assert "sim_seconds" not in tr.history[-1]
+    assert list(tr.straggler.ema) == ["self"]

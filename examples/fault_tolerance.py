@@ -16,7 +16,7 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import RunConfig, get_config
 from repro.configs.base import ShapeConfig
 from repro.ft.elastic import best_mesh_for
-from repro.ft.manager import FaultToleranceManager
+from repro.ft.manager import FaultToleranceManager, NodeFailure
 from repro.models.params import init_params
 from repro.optim.adamw import adamw_init
 from repro.train.train_step import make_train_step
@@ -35,8 +35,8 @@ def main():
     tr = Trainer(cfg, run, shape, step_fn=step_fn, params=params,
                  opt_state=adamw_init(params), ckpt=ckpt)
     try:
-        tr.run_steps(20, fail_at=13)
-    except RuntimeError as e:
+        tr.run_steps(20, fail_at=13)   # node goes silent; the event-driven
+    except NodeFailure as e:           # watchdog detects it in sim time
         print(f"[ft] {e}")
     ckpt.wait()
 

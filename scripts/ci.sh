@@ -1,21 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
-# plus the runtime/train/kvserve benchmark sections with schema-validated
-# JSON output (BENCH_4.json — the PR-4 perf trajectory record).
-#   scripts/ci.sh            # tests + runtime,train,kvserve benches
+# plus the runtime/train/colocation/kvserve benchmark sections with
+# schema-validated JSON output (BENCH_5.json — the PR-5 perf trajectory
+# record).
+#   scripts/ci.sh            # tests + runtime,train,colocation,kvserve
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_4.json --only runtime,train,kvserve
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_5.json \
+    --only runtime,train,colocation,kvserve
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_4.json") as f:
+with open("BENCH_5.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -38,12 +40,17 @@ else:
                      "fig18/staged_engine_ttft",
                      "train/ckpt_soc_busy", "train/ckpt_host_busy",
                      "train/ckpt_soc_idle", "train/ckpt_host_idle",
-                     "train/straggler_mitigated", "train/elastic_detect"):
+                     "train/straggler_mitigated", "train/elastic_detect",
+                     "colocation/serve_solo_p99",
+                     "colocation/serve_unmanaged_p99",
+                     "colocation/serve_managed_p99",
+                     "colocation/train_solo", "colocation/train_unmanaged",
+                     "colocation/train_managed"):
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_4.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_4.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_5.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_5.json OK ({len(doc['rows'])} rows)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

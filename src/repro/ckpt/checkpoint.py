@@ -152,6 +152,29 @@ class CheckpointManager:
     thread does compress+write+replicate — training continues.
     """
 
+    @staticmethod
+    def choose_staging(candidates: List[str], *, ledger=None,
+                       direction: str = "out",
+                       fallback: Optional[str] = None) -> str:
+        """Pick the staging path for one save from *live* occupancy.
+
+        The paper's §6.1 lesson is that the right staging path (direct
+        host PCIe vs the weaker SoC DMA engine) depends on what else is
+        on the wire *right now*, not on a startup constant. Given a
+        ``BudgetLedger``, the candidate with the most available
+        ``direction`` budget (discount and current holders included)
+        wins; ties keep candidate order, so listing the preferred
+        (faster) path first reproduces the static choice on an idle
+        fabric. Without a ledger the static ``fallback`` (or the first
+        candidate) is used — existing call sites keep their behaviour.
+        """
+        if not candidates:
+            raise ValueError("choose_staging needs at least one candidate")
+        if ledger is None:
+            return fallback if fallback is not None else candidates[0]
+        return max(candidates,
+                   key=lambda p: ledger.available(p, direction, joining="ckpt"))
+
     def __init__(self, directory: str, *, every: int = 100, keep: int = 2,
                  compress: bool = True, replicas: int = 0,
                  replica_dirs: Optional[List[str]] = None):

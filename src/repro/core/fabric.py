@@ -170,6 +170,47 @@ class Fabric(Mapping):
     def router(self) -> "MultipathRouter":
         return MultipathRouter(self)
 
+    # -- composition (multi-tenant fabrics) -----------------------------
+    def namespaced(self, prefix: str, *, sep: str = "/") -> "Fabric":
+        """A copy with every path (and explicit shared_group) renamed
+        ``<prefix><sep><name>`` — so two structurally identical fabrics
+        can coexist in one merged fabric without colliding. Implicit
+        groups (``shared_group=None``) stay implicit: they follow the
+        renamed path automatically."""
+        import dataclasses
+        renamed = [
+            dataclasses.replace(
+                p, name=f"{prefix}{sep}{p.name}",
+                shared_group=(f"{prefix}{sep}{p.shared_group}"
+                              if p.shared_group is not None else None))
+            for p in self._paths.values()]
+        return Fabric(renamed,
+                      concurrency_discount=self.concurrency_discount)
+
+
+def merge_fabrics(*fabrics: Fabric,
+                  concurrency_discount: Optional[float] = None) -> "Fabric":
+    """One fabric from many — the multi-tenant substrate: tenants that
+    should *share* a path (and its budgets) reference the same path name
+    in each input; a duplicate name is tolerated only when the Path
+    definitions are identical (then it merges into one shared path), and
+    a conflicting redefinition raises. Namespace an input first
+    (``Fabric.namespaced``) when its paths must stay private. The merged
+    discount defaults to the max of the inputs (the shared medium is at
+    least as contended as its worst constituent)."""
+    merged: Dict[str, Path] = {}
+    for fab in fabrics:
+        for p in fab.values():
+            have = merged.get(p.name)
+            if have is None:
+                merged[p.name] = p
+            elif have != p:
+                raise FabricError(
+                    f"merge conflict on path {p.name!r}: {have} != {p}")
+    disc = (concurrency_discount if concurrency_discount is not None
+            else max((f.concurrency_discount for f in fabrics), default=0.0))
+    return Fabric(merged.values(), concurrency_discount=disc)
+
 
 # ----------------------------------------------------------------------
 # work descriptions

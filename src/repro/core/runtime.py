@@ -40,8 +40,12 @@ Rebalancing model: whenever a transfer joins or leaves an interference
 group, every member's progress is settled at its old rate, the group's
 per-direction capacity (discounted iff more than one distinct flow is
 active on the group, counting non-transfer ledger holders) is split
-evenly among the members on each (path, direction), and completion
-events are rescheduled. Path ``latency`` is served as a pure delay
+among the members on each (path, direction) by *weighted* max-min
+fairness, and completion events are rescheduled. Weights come from the
+runtime's QoS policy (any object with ``weight(tenant) -> float``;
+see tenancy/qos.QoSPolicy) applied to each transfer's ``tenant`` tag —
+with no policy, or all weights equal, the split degenerates to the
+equal shares of the untenanted runtime. Path ``latency`` is served as a pure delay
 before the transfer starts occupying capacity. External ledger
 reservations (e.g. a primary functionality's pre-reserved traffic) are
 respected: transfers only share what the ledger has left.
@@ -155,7 +159,7 @@ class Transfer:
 
     def __init__(self, runtime: "FabricRuntime", path: str, amount: float,
                  *, direction: str = OUT, flow: Optional[str] = None,
-                 max_rate: float = math.inf):
+                 max_rate: float = math.inf, tenant: Optional[str] = None):
         if amount <= 0:
             raise FabricError("transfer amount must be > 0")
         if direction not in (OUT, IN):
@@ -163,6 +167,7 @@ class Transfer:
         self.runtime = runtime
         self.path = path
         self.direction = direction
+        self.tenant = tenant
         self.amount = float(amount)
         self.remaining = float(amount)
         self.flow = flow if flow is not None else f"xfer-{next(self._ids)}"
@@ -338,25 +343,34 @@ class FabricRuntime:
     condition. The ledger may carry external (non-transfer)
     reservations — transfers share only the remaining budget, and an
     external holder counts toward the §4.1 discount.
+
+    ``qos`` is an optional tenancy policy: any object exposing
+    ``weight(tenant) -> float`` (see tenancy/qos.QoSPolicy). Transfers
+    tagged with a ``tenant`` then fair-share each (path, direction) in
+    proportion to their tenant's weight — a latency-class serve tenant
+    can be promised most of a path a throughput-class train tenant is
+    also using. Untagged transfers weigh 1.0.
     """
 
     def __init__(self, fabric: Fabric, *, clock: Optional[SimClock] = None,
-                 ledger: Optional[BudgetLedger] = None):
+                 ledger: Optional[BudgetLedger] = None, qos=None):
         self.fabric = fabric
         self.clock = clock if clock is not None else SimClock()
         self.ledger = ledger if ledger is not None else fabric.ledger()
+        self.qos = qos
         # interference group -> active (capacity-holding) transfers
         self._active: Dict[str, List[Transfer]] = {}
 
     # -- API ------------------------------------------------------------
     def transfer(self, path: str, amount: float, *, direction: str = OUT,
                  flow: Optional[str] = None, max_rate: float = math.inf,
-                 delay: float = 0.0,
+                 delay: float = 0.0, tenant: Optional[str] = None,
                  on_complete: Optional[Callable[[Transfer], None]] = None,
                  ) -> Transfer:
         """Start moving ``amount`` (path units) over ``path``. The
         path's ``latency`` (plus ``delay``) is served first without
-        holding capacity; then the transfer joins the fair-share pool.
+        holding capacity; then the transfer joins the fair-share pool
+        (weighted by ``tenant`` under a QoS policy).
         """
         if path not in self.fabric:
             raise FabricError(f"unknown path {path!r} "
@@ -365,7 +379,7 @@ class FabricRuntime:
         if direction == IN and not p.bidirectional:
             raise FabricError(f"path {path} has no {IN} budget")
         t = Transfer(self, path, amount, direction=direction, flow=flow,
-                     max_rate=max_rate)
+                     max_rate=max_rate, tenant=tenant)
         if on_complete is not None:
             t.add_callback(on_complete)
         lead = delay + p.latency
@@ -438,6 +452,31 @@ class FabricRuntime:
         group = self.fabric[path].group
         return [t for t in self._active.get(group, []) if t.path == path]
 
+    def weight_of(self, tenant: Optional[str]) -> float:
+        """A tenant's QoS weight under the runtime's policy (1.0 with no
+        policy; the policy's default for unregistered tenants)."""
+        if self.qos is None:
+            return 1.0
+        return float(self.qos.weight(tenant))
+
+    def occupancy(self, path: str, direction: str = OUT,
+                  *, by_tenant: bool = False):
+        """Fraction of a path direction's raw capacity currently held in
+        the ledger by in-flight transfers — live occupancy, the input to
+        admission control and ledger-aware staging choices. With
+        ``by_tenant``, a dict attributing the fraction per tenant tag
+        (untagged transfers land under ``None``)."""
+        cap = self.fabric.direction_capacity(path, direction)
+        if cap <= 0:
+            return {} if by_tenant else 0.0
+        held: Dict[Optional[str], float] = {}
+        for t in self.active_transfers(path):
+            if t.direction == direction and t._res > 0:
+                held[t.tenant] = held.get(t.tenant, 0.0) + t._res
+        if by_tenant:
+            return {k: v / cap for k, v in held.items()}
+        return sum(held.values()) / cap
+
     def rebalance(self, path: Optional[str] = None) -> None:
         """Re-split capacity after an *external* ledger change (e.g. a
         primary functionality released its reservation). Transfer
@@ -508,19 +547,27 @@ class FabricRuntime:
         buckets: Dict[Tuple[str, str], List[Transfer]] = {}
         for t in members:
             buckets.setdefault((t.path, t.direction), []).append(t)
-        # 3. max-min fair split of what the ledger has left, per (path,
-        # direction): a max_rate-capped flow's surplus is water-filled
-        # back to the uncapped flows
+        # 3. weighted max-min fair split of what the ledger has left, per
+        # (path, direction): each flow's share is proportional to its
+        # tenant's QoS weight, and a max_rate-capped flow's surplus is
+        # water-filled back to the unsaturated flows. All weights 1 (or
+        # no policy) reduces to the equal split.
         for (path, direction), ts in buckets.items():
             cap = self.fabric.direction_capacity(path, direction)
             if discounted:
                 cap *= 1.0 - self.fabric.concurrency_discount
             avail = max(0.0, cap - self.ledger.reserved(path, direction))
-            remaining_n = len(ts)
-            for t in sorted(ts, key=lambda t: t.max_rate):
-                t.rate = max(0.0, min(avail / remaining_n, t.max_rate))
+            weights = {id(t): self.weight_of(t.tenant) for t in ts}
+            remaining_w = sum(weights.values())
+            # ascending max_rate-per-weight: a flow that saturates its
+            # cap below its proportional share frees surplus for all
+            # flows still unassigned
+            for t in sorted(ts, key=lambda t: t.max_rate / weights[id(t)]):
+                w = weights[id(t)]
+                share = avail * w / remaining_w if remaining_w > 0 else 0.0
+                t.rate = max(0.0, min(share, t.max_rate))
                 avail -= t.rate
-                remaining_n -= 1
+                remaining_w -= w
             for t in ts:
                 if t.rate > 0:
                     kw = {"out": t.rate} if direction == OUT else {"in_": t.rate}

@@ -31,6 +31,12 @@ from typing import Callable, Dict, List, Optional
 from repro.ckpt.checkpoint import CheckpointManager
 
 
+class NodeFailure(RuntimeError):
+    """A node went silent and its failure watchdog expired. Raised by
+    single-node drivers (Trainer.run_steps) once the event-driven
+    detection fires; the recovery path is checkpoint restore."""
+
+
 @dataclass
 class NodeState:
     name: str

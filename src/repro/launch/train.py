@@ -125,8 +125,10 @@ def main(argv=None):
     ap.add_argument("--fabric", default="v5e",
                     help="named fabric for --simulate "
                          "(v5e | weak-soc | fast-net | linefs)")
-    ap.add_argument("--ckpt-staging", default="soc", choices=["soc", "host"],
-                    help="--simulate: checkpoint staging path")
+    ap.add_argument("--ckpt-staging", default="soc",
+                    choices=["soc", "host", "auto"],
+                    help="--simulate: checkpoint staging path (auto = "
+                         "per-save ledger-occupancy choice)")
     ap.add_argument("--host-load", default="",
                     help="--simulate: NODE:FRAC background host-path load, "
                          "e.g. node0:0.6")

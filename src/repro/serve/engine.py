@@ -101,6 +101,9 @@ class _EngineCore:
                  bucket_prefill: bool = True):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.impl = slots, max_len, impl
+        self.tenant: Optional[str] = None   # QoS tag on fabric transfers
+        #: (completion sim-time, ttft) samples — admission control input
+        self.ttft_log: List[Tuple[float, float]] = []
         self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
         self.pos = jnp.zeros((slots,), jnp.int32)       # next write index
         self.active: List[Optional[Request]] = [None] * slots
@@ -228,11 +231,13 @@ class ServeEngine(_EngineCore):
                  cache_hit_mass: float = 0.7, placement_costs=None,
                  runtime: Optional[FabricRuntime] = None,
                  time_model: Optional[ServeTimeModel] = None,
-                 bucket_prefill: bool = True):
+                 bucket_prefill: bool = True,
+                 tenant: Optional[str] = None):
         super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
                          cache_dtype=cache_dtype, seed=seed,
                          bucket_prefill=bucket_prefill)
         self.runtime, self.tm = runtime, time_model
+        self.tenant = tenant
         if runtime is not None and time_model is None:
             raise ValueError("a runtime needs a ServeTimeModel")
         self.placement = None
@@ -246,7 +251,8 @@ class ServeEngine(_EngineCore):
         """Run a transfer to completion (the sync engine blocks on it)."""
         if self.runtime is None or amount <= 0:
             return
-        tr = self.runtime.transfer(path, amount, flow=flow)
+        tr = self.runtime.transfer(path, amount, flow=flow,
+                                   tenant=self.tenant)
         self.runtime.clock.run(stop=lambda: tr.done)
 
     def _now(self) -> Optional[float]:
@@ -280,6 +286,8 @@ class ServeEngine(_EngineCore):
                 amt = len(np.asarray(req.prompt)) * self.tm.prefill_units_per_token
                 self._charge(self.tm.prefill_path, amt, f"prefill:{req.rid}")
             req.first_token_time = self._now()
+            if req.first_token_time is not None:
+                self.ttft_log.append((req.first_token_time, req.ttft))
             self._activate(s, req, cache1, npos)
 
     # ------------------------------------------------------------------
@@ -347,8 +355,10 @@ class PrefillStage:
         amt = len(np.asarray(req.prompt)) * tm.prefill_units_per_token
         if amt > 0:
             yield eng.runtime.transfer(tm.prefill_path, amt,
-                                       flow=f"prefill:{req.rid}")
+                                       flow=f"prefill:{req.rid}",
+                                       tenant=eng.tenant)
         req.first_token_time = eng.clock.now
+        eng.ttft_log.append((req.first_token_time, req.ttft))
         eng.ready.append((req, cache1, npos))
         self.inflight -= 1
         eng.arrived.fire()        # the dispatcher may start the next prefill
@@ -410,7 +420,7 @@ class DecodeStage:
             # completes when the slowest path drains
             transfers = [
                 eng.runtime.transfer(path, groups[path] * tm.decode_units_per_slot,
-                                     flow=f"decode:{path}")
+                                     flow=f"decode:{path}", tenant=eng.tenant)
                 for path in sorted(groups)
                 if groups[path] * tm.decode_units_per_slot > 0]
             for tr in transfers:
@@ -435,10 +445,12 @@ class StagedServeEngine(_EngineCore):
                  bucket_prefill: bool = True,
                  plan_placement: bool = False,
                  cache_hit_mass: float = 0.7, placement_costs=None,
-                 max_inflight_prefills: int = 2):
+                 max_inflight_prefills: int = 2,
+                 tenant: Optional[str] = None):
         super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
                          cache_dtype=cache_dtype, seed=seed,
                          bucket_prefill=bucket_prefill)
+        self.tenant = tenant
         if runtime is None:
             if fabric is None:
                 raise ValueError("StagedServeEngine needs a fabric or runtime")
@@ -483,6 +495,24 @@ class StagedServeEngine(_EngineCore):
             self.runtime.process(self.admit_stage.process(), name="AdmitStage")
             self._decode_proc = self.runtime.process(
                 self.decode_stage.process(), name="DecodeStage")
+
+    def start(self) -> None:
+        """Spawn the stage processes without driving the clock — for
+        embedding this engine as one tenant in a larger timeline (the
+        tenancy Colocation harness owns the clock there)."""
+        self._start()
+
+    @property
+    def idle(self) -> bool:
+        """True when every submitted request has been retired."""
+        return self._n_open == 0
+
+    @property
+    def prefill_backlog(self) -> int:
+        """Requests not yet through prefill: queued, in flight, or ready
+        but unadmitted — the admission controller's 'serve still has
+        latency-critical work pending' signal."""
+        return len(self.queue) + self.prefill_stage.inflight + len(self.ready)
 
     def run(self, until: Optional[float] = None) -> List[Request]:
         """Run the simulated timeline until all submitted requests are

@@ -35,6 +35,18 @@ simulated time; the cluster then kills the survivor processes
 survivor mesh with ``ft.elastic.best_mesh_for``, restores the newest
 committed checkpoint, and resumes the step loop with the smaller
 membership — fail -> detect -> resize -> resume, all on the SimClock.
+
+Tenancy (PR 5): the cluster can run as the *throughput tenant* of a
+shared runtime — every transfer carries ``tenant=`` for the QoS
+weighted fair-share, ``begin``/``done``/``finish`` let a harness
+(tenancy/colocation.py) drive the clock, and
+``pause_transfers``/``resume_transfers`` implement admission-control
+deferral: in-flight allreduce/checkpoint transfers are canceled (their
+reservations return to the ledger), node processes park on a resume
+signal, and the canceled remainders are re-issued — deferral, never
+loss. ``ckpt_path="auto"`` additionally picks each save's staging path
+from live ledger occupancy (CheckpointManager.choose_staging) instead
+of a startup constant.
 """
 from __future__ import annotations
 
@@ -51,6 +63,7 @@ from repro.ft.manager import FaultToleranceManager
 from repro.ft.straggler import StragglerDetector
 
 SOC, HOST = "soc", "host"
+AUTO = "auto"     # ckpt staging: pick per save from live ledger occupancy
 
 
 def train_fabric(nodes: int, *, host_bw: float = hw.PCIE_BW,
@@ -91,13 +104,13 @@ class ClusterTimeModel:
     compute_s: float                 # roofline compute time per step
     grad_bytes: float                # gradient bytes staged host<->device
     ckpt_bytes: float = 0.0          # per-node checkpoint shard bytes
-    ckpt_path: str = SOC             # "soc" | "host" staging path
+    ckpt_path: str = SOC             # "soc" | "host" | "auto" staging path
     tokens_per_step: int = 0         # global tokens, for tokens/s
 
     def __post_init__(self):
-        if self.ckpt_path not in (SOC, HOST):
-            raise ValueError(f"ckpt_path must be '{SOC}' or '{HOST}', "
-                             f"got {self.ckpt_path!r}")
+        if self.ckpt_path not in (SOC, HOST, AUTO):
+            raise ValueError(f"ckpt_path must be '{SOC}', '{HOST}' or "
+                             f"'{AUTO}', got {self.ckpt_path!r}")
 
     @classmethod
     def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
@@ -160,7 +173,8 @@ class TrainCluster:
                  node_compute_scale: Optional[Dict[str, float]] = None,
                  host_load: Optional[Dict[str, float]] = None,
                  mitigate_stragglers: bool = False,
-                 fail_at: Optional[Tuple[str, int]] = None):
+                 fail_at: Optional[Tuple[str, int]] = None,
+                 tenant: Optional[str] = None):
         if nodes < 1:
             raise ValueError("cluster needs at least one node")
         self.tm = time_model
@@ -178,6 +192,9 @@ class TrainCluster:
         self.heartbeat_timeout = heartbeat_timeout
         self.mitigate_stragglers = mitigate_stragglers
         self.fail_at = fail_at
+        self.tenant = tenant             # QoS tag on every fabric transfer
+        self._paused = False             # admission-control throttle state
+        self._resume = self.runtime.signal()
         self.straggler = StragglerDetector()
         self.ft = FaultToleranceManager(ckpt, timeout=heartbeat_timeout,
                                         runtime=self.runtime)
@@ -230,6 +247,65 @@ class TrainCluster:
         return (self.tm.ckpt_bytes > 0 and self.ckpt_every > 0
                 and step % self.ckpt_every == 0)
 
+    def _staging_path(self, node: ClusterNode) -> str:
+        """This save's checkpoint staging path. ``auto`` asks the ledger
+        which of the node's host/soc paths has the most free outbound
+        budget *right now* (CheckpointManager.choose_staging); a static
+        config keeps the fixed §6.1 choice."""
+        if self.tm.ckpt_path == AUTO:
+            return CheckpointManager.choose_staging(
+                [f"{HOST}:{node.index}", f"{SOC}:{node.index}"],
+                ledger=self.runtime.ledger, direction=OUT)
+        return f"{self.tm.ckpt_path}:{node.index}"
+
+    # -- admission-control throttling ------------------------------------
+    def pause_transfers(self) -> None:
+        """Defer the train tenant's fabric traffic: cancel every
+        in-flight transfer (the reservations go straight back to the
+        ledger) and hold new ones until ``resume_transfers``. Node
+        processes park on the resume signal and re-issue the canceled
+        remainders — progress is deferred, never lost."""
+        if self._paused:
+            return
+        self._paused = True
+        self._resume = self.runtime.signal()
+        self.events.append({"t": self.runtime.clock.now,
+                            "event": "transfers_paused", "step": self._step})
+        for n in self.nodes:
+            for t in n.inflight:
+                if not t.done:
+                    self.runtime.cancel(t)
+
+    def resume_transfers(self) -> None:
+        if not self._paused:
+            return
+        self._paused = False
+        self.events.append({"t": self.runtime.clock.now,
+                            "event": "transfers_resumed", "step": self._step})
+        self._resume.fire()
+
+    @property
+    def paused(self) -> bool:
+        return self._paused
+
+    def _tenant_xfer(self, node: ClusterNode, path: str, amount: float,
+                     direction: str, flow: str):
+        """Move ``amount`` over ``path`` respecting throttle pauses: a
+        transfer the admission controller cancels is re-issued with its
+        remaining amount after resume (cancel + re-issue is the pause
+        mechanism — the ledger conserves across every transition)."""
+        remaining = amount
+        while remaining > 1e-9:
+            while self._paused:
+                yield self._resume
+            t = self.runtime.transfer(path, remaining, direction=direction,
+                                      flow=flow, tenant=self.tenant)
+            node.inflight.append(t)
+            yield t
+            if not t.canceled:
+                return
+            remaining = t.remaining
+
     # -- the per-node step loop -----------------------------------------
     def _node_proc(self, node: ClusterNode):
         rt, tm = self.runtime, self.tm
@@ -246,10 +322,10 @@ class TrainCluster:
             t0 = rt.clock.now
             node.inflight = [t for t in node.inflight if not t.done]
             ck = None
-            if self._ckpt_step(step):
-                ck = rt.transfer(f"{tm.ckpt_path}:{node.index}",
+            if self._ckpt_step(step) and not self._paused:
+                ck = rt.transfer(self._staging_path(node),
                                  tm.ckpt_bytes, direction=OUT,
-                                 flow=f"ckpt:{node.name}")
+                                 flow=f"ckpt:{node.name}", tenant=self.tenant)
                 node.inflight.append(ck)
             yield tm.compute_s * node.compute_scale * node.share_scale
             if tm.grad_bytes > 0:
@@ -257,22 +333,28 @@ class TrainCluster:
                 # own gradient flow joins the path (detector input)
                 self.straggler.observe_ledger(
                     node.name, rt.ledger, f"host:{node.index}")
-                out = rt.transfer(f"host:{node.index}", tm.grad_bytes,
-                                  direction=OUT, flow=f"grad:{node.name}")
-                node.inflight.append(out)
-                yield out
+                yield from self._tenant_xfer(node, f"host:{node.index}",
+                                             tm.grad_bytes, OUT,
+                                             f"grad:{node.name}")
                 live = max(len(self._live()), 1)
                 ring = 2.0 * (live - 1) / live * tm.grad_bytes
                 if ring > 0:
-                    rx = rt.transfer("net", ring, flow=f"ring:{node.name}")
-                    node.inflight.append(rx)
-                    yield rx
-                back = rt.transfer(f"host:{node.index}", tm.grad_bytes,
-                                   direction=IN, flow=f"grad:{node.name}")
-                node.inflight.append(back)
-                yield back
+                    yield from self._tenant_xfer(node, "net", ring, OUT,
+                                                 f"ring:{node.name}")
+                yield from self._tenant_xfer(node, f"host:{node.index}",
+                                             tm.grad_bytes, IN,
+                                             f"grad:{node.name}")
             if ck is not None:
                 yield ck                      # staging is on the step path
+                if ck.canceled and ck.remaining > 1e-9:
+                    # throttled mid-save: defer the rest, same path
+                    yield from self._tenant_xfer(node, ck.path, ck.remaining,
+                                                 OUT, f"ckpt:{node.name}")
+            elif self._ckpt_step(step):
+                # the save's start itself was deferred by a pause
+                yield from self._tenant_xfer(node, self._staging_path(node),
+                                             tm.ckpt_bytes, OUT,
+                                             f"ckpt:{node.name}")
             self.straggler.observe(node.name, rt.clock.now - t0)
             yield self._barrier.arrive()
 
@@ -306,6 +388,9 @@ class TrainCluster:
         self.history.append(rec)
         self._step = step + 1
         self._step_start = now
+        # stamp completion at the last barrier release, so a colocated
+        # run's summary is not diluted by other tenants' tail time
+        self._done_at = now if self._step >= self._end else None
 
     # -- failure handling ------------------------------------------------
     def _failure_watch(self):
@@ -360,14 +445,19 @@ class TrainCluster:
             n.proc = self.runtime.process(self._node_proc(n),
                                           name=f"step:{n.name}")
 
-    def run(self, num_steps: int) -> dict:
-        """Advance ``num_steps`` global steps in simulated time. Returns
-        a summary (simulated seconds, tokens/s, events)."""
+    def begin(self, num_steps: int) -> None:
+        """Arm heartbeats/FT and spawn the step processes *without*
+        driving the clock — for running this cluster as one tenant on a
+        shared timeline (the tenancy Colocation harness owns the clock).
+        Pair with ``done`` (poll) and ``finish()`` (teardown+summary);
+        plain single-tenant callers just use ``run()``."""
         rt = self.runtime
-        t0 = rt.clock.now
+        self._run_t0 = rt.clock.now
+        self._num_steps = num_steps
+        self._done_at: Optional[float] = None
         self._step = self.start_step
         self._end = self.start_step + num_steps
-        self._step_start = t0
+        self._step_start = self._run_t0
         for n in self._live():
             if n.name not in self.ft.nodes:
                 self.ft.register(n.name, devices=n.devices)
@@ -375,20 +465,29 @@ class TrainCluster:
                 n.hb_proc = rt.every(self.heartbeat_every,
                                      lambda n=n: self._heartbeat(n),
                                      name=f"hb:{n.name}", start_delay=0.0)
-        watch = rt.process(self._failure_watch(), name="failure-watch")
+        self._watch = rt.process(self._failure_watch(), name="failure-watch")
         self._spawn(self._live())
-        rt.clock.run(stop=lambda: all(
-            n.proc is None or n.proc.done for n in self._live()))
-        # tear down the periodic machinery so the heap can drain
-        watch.kill()
+
+    @property
+    def done(self) -> bool:
+        """True when every live node's step process has returned."""
+        return all(n.proc is None or n.proc.done for n in self._live())
+
+    def finish(self) -> dict:
+        """Tear down the periodic machinery (so the heap can drain) and
+        summarize the steps since ``begin``."""
+        rt = self.runtime
+        self._watch.kill()
         for n in self.nodes:
             if n.hb_proc is not None:
                 n.hb_proc.kill()
                 n.hb_proc = None
         self.ft.disarm()
+        num_steps = self._num_steps
         first = self._end - num_steps
         self.start_step = self._step
-        elapsed = rt.clock.now - t0
+        end_t = self._done_at if self._done_at is not None else rt.clock.now
+        elapsed = end_t - self._run_t0
         summary = {
             "steps": self._step - first,    # completed by *this* call
             "sim_seconds": elapsed,
@@ -402,3 +501,10 @@ class TrainCluster:
         if self.history and "loss" in self.history[-1]:
             summary["loss"] = self.history[-1]["loss"]
         return summary
+
+    def run(self, num_steps: int) -> dict:
+        """Advance ``num_steps`` global steps in simulated time. Returns
+        a summary (simulated seconds, tokens/s, events)."""
+        self.begin(num_steps)
+        self.runtime.clock.run(stop=lambda: self.done)
+        return self.finish()

@@ -32,6 +32,7 @@ import numpy as np
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.data.pipeline import TokenPipeline
+from repro.ft.manager import FaultToleranceManager, NodeFailure
 from repro.ft.straggler import StragglerDetector
 
 
@@ -45,7 +46,8 @@ class Trainer:
                  node_name: str = "self",
                  runtime=None,                 # FabricRuntime (simulated time)
                  time_model=None,              # ClusterTimeModel
-                 node_index: int = 0):
+                 node_index: int = 0,
+                 ft_timeout: float = 1.0):
         self.cfg, self.run, self.shape = cfg, run, shape
         self.step_fn = step_fn
         self.params, self.opt_state = params, opt_state
@@ -62,6 +64,9 @@ class Trainer:
             from repro.core.runtime import FabricRuntime
             runtime = FabricRuntime(train_fabric(1))
         self.runtime = runtime
+        self.ft_timeout = ft_timeout
+        self.ft: Optional[FaultToleranceManager] = None
+        self._hb_proc = None
         self.history: list = []
         self.start_step = 0
         if ckpt is not None and ckpt.latest_step() is not None:
@@ -90,9 +95,13 @@ class Trainer:
         finished = []
 
         def one_step():
+            from repro.train.cluster import AUTO
             ck = None
             if will_ckpt:
-                ck = rt.transfer(f"{tm.ckpt_path}:{i}", tm.ckpt_bytes,
+                staging = (CheckpointManager.choose_staging(
+                    [f"host:{i}", f"soc:{i}"], ledger=rt.ledger, direction=OUT)
+                    if tm.ckpt_path == AUTO else f"{tm.ckpt_path}:{i}")
+                ck = rt.transfer(staging, tm.ckpt_bytes,
                                  direction=OUT, flow=f"ckpt:{self.node_name}")
             yield tm.compute_s
             if tm.grad_bytes > 0:
@@ -110,18 +119,70 @@ class Trainer:
         rt.clock.run(stop=lambda: bool(finished))
         return rt.clock.now - t0
 
+    # -- event-driven failure injection (ft/manager watchdogs) -----------
+    def _arm_ft(self) -> None:
+        """Register this node with an event-driven FT manager on the
+        trainer's runtime (created on demand for wall-clock trainers).
+        Heartbeats are a *periodic runtime process* (as on the cluster),
+        not per-step calls — a simulated step longer than the timeout
+        must not let the watchdog expire under a healthy node. A
+        silenced node is then detected by its watchdog expiring on the
+        simulated clock — no wall-clock path."""
+        if self.runtime is None:
+            from repro.train.cluster import train_fabric
+            from repro.core.runtime import FabricRuntime
+            self.runtime = FabricRuntime(train_fabric(1))
+        if self.ft is None:
+            self.ft = FaultToleranceManager(self.ckpt, timeout=self.ft_timeout,
+                                            runtime=self.runtime)
+        if self.node_name not in self.ft.nodes:
+            self.ft.register(self.node_name)
+        if self._hb_proc is None or self._hb_proc.done:
+            self._hb_proc = self.runtime.every(
+                self.ft_timeout / 4.0,
+                lambda: self.ft.heartbeat(self.node_name),
+                name=f"hb:{self.node_name}", start_delay=0.0)
+
+    def _disarm_ft(self) -> None:
+        if self._hb_proc is not None:
+            self._hb_proc.kill()
+            self._hb_proc = None
+        if self.ft is not None:
+            self.ft.disarm()
+
+    def _fail_silently(self, step: int) -> None:
+        """Go silent at `step`: kill the heartbeat process and run the
+        simulated clock until the watchdog fires, then surface the
+        detection."""
+        rt = self.runtime
+        self._hb_proc.kill()
+        self._hb_proc = None
+        rt.clock.run(stop=lambda: bool(self.ft.pending_failures))
+        self.ft.disarm()
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        detected = self.ft.pending_failures.pop(0)
+        raise NodeFailure(
+            f"node {detected} failure detected at "
+            f"sim t={rt.clock.now:.3f}s (silent since step {step})")
+
     def run_steps(self, num_steps: int, *, fail_at: Optional[int] = None) -> Dict:
-        """Run `num_steps` from start_step. `fail_at` raises a simulated
-        node failure at that step (tests drive recovery through ft/)."""
+        """Run `num_steps` from start_step. ``fail_at`` silences this
+        node at that step: its per-step heartbeat stops, the
+        FaultToleranceManager watchdog expires in *simulated* time, and
+        the detection surfaces as ``NodeFailure`` (recovery = a fresh
+        Trainer against the same checkpoint directory)."""
         step = self.start_step
         end = self.start_step + num_steps
+        if fail_at is not None:
+            self._arm_ft()
         tokens_per_step = (self.time_model.tokens_per_step
                            if self.time_model is not None
                            and self.time_model.tokens_per_step
                            else self.shape.global_batch * self.shape.seq_len)
         while step < end:
             if fail_at is not None and step == fail_at:
-                raise RuntimeError(f"simulated node failure at step {step}")
+                self._fail_silently(step)
             t0 = time.monotonic()
             batch = self.put_batch(self.pipeline.batch_at(step))
             self.params, self.opt_state, metrics = self.step_fn(
@@ -141,6 +202,7 @@ class Trainer:
             if self.ckpt is not None:
                 self.ckpt.maybe_save(step, (self.params, self.opt_state))
             step += 1
+        self._disarm_ft()
         if self.ckpt is not None:
             self.ckpt.wait()
         self.start_step = step

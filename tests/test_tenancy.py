@@ -1,0 +1,477 @@
+"""Multi-tenant colocation — the ISSUE 5 acceptance assertions, all on
+one shared runtime/ledger in simulated time:
+
+  (a) unmanaged colocation inflates the serve tenant's p99 TTFT by >2x
+      its solo baseline, while QoS-weighted + admission-controlled
+      colocation holds it <= 1.2x solo with train tokens/s within 20%
+      of solo;
+  (b) the serve tenant's greedy tokens and the train tenant's loss
+      curve are bit-identical to their solo runs (colocation moves
+      *when*, never *what*);
+  (c) per-path budget conservation holds under weighted sharing across
+      admit/throttle/resume transitions.
+
+Plus the satellite coverage: weighted fair-sharing invariants in
+core/runtime.py (conservation, reduction to equal shares, rebalance on
+cancel/complete), the fabric merge/namespace helpers, and the
+ledger-aware checkpoint staging choice.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fabric import (Fabric, FabricError, IN, OUT, Path,
+                               merge_fabrics)
+from repro.core.runtime import FabricRuntime
+from repro.serve.engine import Request
+from repro.tenancy import (AdmissionConfig, Colocation, QoSPolicy, SERVE,
+                           TRAIN, Tenant, colocation_fabric,
+                           colocation_time_model, percentile, solo_serve,
+                           solo_train)
+from repro.train.cluster import ClusterTimeModel, TrainCluster
+
+
+# ----------------------------------------------------------------------
+# weighted fair-sharing in the runtime (satellite)
+# ----------------------------------------------------------------------
+
+def _rt(cap=100.0, disc=0.0, qos=None):
+    return FabricRuntime(Fabric.of(Path("link", cap),
+                                   concurrency_discount=disc), qos=qos)
+
+
+def test_weighted_shares_follow_tenant_weights():
+    """Two tenants 3:1 on one path: rates split 3:1 of the discounted
+    capacity, and everything reserved is released at the end."""
+    cap, disc = 100.0, 0.1
+    qos = QoSPolicy([Tenant("hi", weight=3.0), Tenant("lo", weight=1.0)])
+    rt = _rt(cap, disc, qos)
+    t1 = rt.transfer("link", 90.0, tenant="hi")
+    t2 = rt.transfer("link", 90.0, tenant="lo")
+    seen = {}
+    rt.clock.schedule(0.1, lambda: seen.update(hi=t1.rate, lo=t2.rate))
+    rt.clock.run()
+    eff = cap * (1 - disc)
+    assert seen["hi"] == pytest.approx(eff * 0.75)
+    assert seen["lo"] == pytest.approx(eff * 0.25)
+    assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_weights_one_reduce_to_equal_shares():
+    """All-ones policy is byte-for-byte the unweighted runtime."""
+    qos = QoSPolicy([Tenant("a", weight=1.0), Tenant("b", weight=1.0)])
+    finals = {}
+    for name, policy in (("plain", None), ("ones", qos)):
+        rt = _rt(100.0, 0.125, policy)
+        ta = rt.transfer("link", 80.0, tenant="a")
+        tb = rt.transfer("link", 50.0, tenant="b")
+        rt.clock.run()
+        finals[name] = (ta.finished_at, tb.finished_at)
+    assert finals["plain"] == finals["ones"]
+
+
+def test_weighted_rebalance_on_cancel_and_complete():
+    """Cancel the heavy tenant mid-flight: the survivor takes the whole
+    (undiscounted) path; ledger returns to zero."""
+    qos = QoSPolicy([Tenant("hi", weight=4.0), Tenant("lo", weight=1.0)])
+    rt = _rt(100.0, 0.0, qos)
+    t_hi = rt.transfer("link", 100.0, tenant="hi")   # 80/s share
+    t_lo = rt.transfer("link", 100.0, tenant="lo")   # 20/s share
+    rt.clock.schedule(0.5, lambda: rt.cancel(t_hi))
+    rt.clock.run()
+    assert t_hi.canceled and t_hi.remaining == pytest.approx(60.0)
+    # lo: 0.5s at 20/s, then solo at 100/s for the remaining 90
+    assert t_lo.finished_at == pytest.approx(0.5 + 90.0 / 100.0)
+    assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_weighted_max_rate_surplus_water_fills():
+    """A capped heavy flow's surplus goes to lighter flows (weighted
+    max-min, not strict proportionality)."""
+    qos = QoSPolicy([Tenant("hi", weight=9.0), Tenant("lo", weight=1.0)])
+    rt = _rt(100.0, 0.0, qos)
+    hi = rt.transfer("link", 10.0, tenant="hi", max_rate=10.0)
+    lo = rt.transfer("link", 90.0, tenant="lo")
+    box = {}
+    rt.clock.schedule(0.1, lambda: box.update(hi=hi.rate, lo=lo.rate))
+    rt.clock.run()
+    assert box["hi"] == pytest.approx(10.0)
+    assert box["lo"] == pytest.approx(90.0)       # 10 share + 80 surplus
+    assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_weighted_shares_conserve_budget_property():
+    """Property: random weights/amounts never over-commit a path
+    mid-flight, and the ledger drains to zero after completion."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.floats(0.5, 8.0), st.floats(1.0, 50.0)),
+                    min_size=1, max_size=5),
+           st.floats(0.0, 0.3))
+    def inner(flows, disc):
+        qos = QoSPolicy([Tenant(f"t{i}", weight=w)
+                         for i, (w, _) in enumerate(flows)])
+        rt = _rt(100.0, disc, qos)
+        ts = [rt.transfer("link", amt, tenant=f"t{i}")
+              for i, (_, amt) in enumerate(flows)]
+        cap_seen = {}
+
+        def probe():
+            cap_seen["rates"] = sum(t.rate for t in ts if not t.done)
+            cap_seen["reserved"] = rt.ledger.reserved("link", OUT)
+
+        rt.clock.schedule(1e-3, probe)
+        rt.clock.run()
+        eff = 100.0 * (1 - disc if len(flows) > 1 and disc > 0 else 1.0)
+        assert cap_seen["rates"] <= eff + 1e-6
+        assert cap_seen["reserved"] <= eff + 1e-6
+        assert all(t.done for t in ts)
+        assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-6)
+        assert rt.ledger.reserved("link", IN) == pytest.approx(0.0, abs=1e-6)
+
+    inner()
+
+
+@pytest.mark.parametrize("weights,amounts,disc", [
+    ((1.0, 1.0, 1.0), (30.0, 20.0, 10.0), 0.0),
+    ((5.0, 1.0), (100.0, 100.0), 0.125),
+    ((2.0, 3.0, 7.0, 0.5), (10.0, 40.0, 25.0, 5.0), 0.2),
+    ((8.0,), (50.0,), 0.3),
+])
+def test_weighted_shares_conserve_budget_sweep(weights, amounts, disc):
+    """Deterministic slice of the conservation property (the hypothesis
+    version above broadens it when the wheel is present): mid-flight
+    rates never exceed the effective capacity, and the ledger drains."""
+    qos = QoSPolicy([Tenant(f"t{i}", weight=w) for i, w in enumerate(weights)])
+    rt = _rt(100.0, disc, qos)
+    ts = [rt.transfer("link", amt, tenant=f"t{i}")
+          for i, amt in enumerate(amounts)]
+    probes = []
+    rt.clock.schedule(1e-3, lambda: probes.append(
+        (sum(t.rate for t in ts if not t.done),
+         rt.ledger.reserved("link", OUT))))
+    rt.clock.run()
+    eff = 100.0 * ((1 - disc) if len(ts) > 1 and disc > 0 else 1.0)
+    rates, reserved = probes[0]
+    assert rates <= eff + 1e-6 and reserved <= eff + 1e-6
+    assert rates == pytest.approx(reserved)
+    assert all(t.done and not t.canceled for t in ts)
+    assert rt.ledger.reserved("link", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_qos_policy_validation():
+    with pytest.raises(ValueError, match="weight"):
+        Tenant("x", weight=0.0)
+    with pytest.raises(ValueError, match="class"):
+        Tenant("x", tenant_class="batch")
+    with pytest.raises(ValueError, match="duplicate"):
+        QoSPolicy([Tenant("a"), Tenant("a")])
+    pol = QoSPolicy.serve_train(8.0, 2.0)
+    assert pol.weight(SERVE) == 8.0 and pol.weight(TRAIN) == 2.0
+    assert pol.weight("stranger") == 1.0 and pol.weight(None) == 1.0
+    assert pol.tenant_class(SERVE) == "latency"
+
+
+# ----------------------------------------------------------------------
+# fabric merge / namespacing (tentpole helper)
+# ----------------------------------------------------------------------
+
+def test_merge_fabrics_shares_identical_paths_and_rejects_conflicts():
+    a = Fabric.of(Path("shared", 10.0), Path("a_only", 5.0),
+                  concurrency_discount=0.1)
+    b = Fabric.of(Path("shared", 10.0), Path("b_only", 7.0),
+                  concurrency_discount=0.2)
+    m = merge_fabrics(a, b)
+    assert sorted(m) == ["a_only", "b_only", "shared"]
+    assert m.concurrency_discount == 0.2          # max of inputs
+    conflicting = Fabric.of(Path("shared", 99.0))
+    with pytest.raises(FabricError, match="merge conflict"):
+        merge_fabrics(a, conflicting)
+    assert merge_fabrics(a, concurrency_discount=0.05).concurrency_discount \
+        == 0.05
+
+
+def test_namespaced_fabric_prefixes_paths_and_groups():
+    f = Fabric.of(Path("p", 10.0, shared_group="g"), Path("q", 5.0),
+                  concurrency_discount=0.1)
+    n = f.namespaced("tenant0")
+    assert sorted(n) == ["tenant0/p", "tenant0/q"]
+    assert n["tenant0/p"].group == "tenant0/g"
+    assert n["tenant0/q"].group == "tenant0/q"    # implicit group follows
+    # two namespaced copies of one fabric merge cleanly
+    m = merge_fabrics(f.namespaced("x"), f.namespaced("y"))
+    assert len(m) == 4
+
+
+# ----------------------------------------------------------------------
+# ledger-aware checkpoint staging (satellite)
+# ----------------------------------------------------------------------
+
+def test_choose_staging_prefers_free_path_and_falls_back_static():
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.train.cluster import train_fabric
+    fab = train_fabric(1)
+    ledger = fab.ledger()
+    cands = ["host:0", "soc:0"]
+    # no ledger: the static fallback wins
+    assert CheckpointManager.choose_staging(cands, fallback="soc:0") == "soc:0"
+    assert CheckpointManager.choose_staging(cands) == "host:0"
+    # idle fabric: the fatter host path wins
+    assert CheckpointManager.choose_staging(cands, ledger=ledger) == "host:0"
+    # host direction mostly spoken for: the SoC path wins
+    ledger.reserve("host:0", out=0.8 * fab["host:0"].capacity, flow="load")
+    assert CheckpointManager.choose_staging(cands, ledger=ledger) == "soc:0"
+    with pytest.raises(ValueError):
+        CheckpointManager.choose_staging([])
+
+
+def test_auto_staging_matches_best_static_choice():
+    """ckpt_path='auto' reproduces the §6.1 crossover dynamically: the
+    per-save choice reads *standing* occupancy from the live ledger
+    (an external host load — the colocation case), so it equals the
+    best static choice in both the loaded and the idle regime."""
+    def step_time(ckpt_path, host_load):
+        tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e6, ckpt_bytes=8e9,
+                              ckpt_path=ckpt_path)
+        c = TrainCluster(1, tm, ckpt_every=2, host_load=host_load)
+        return c.run(4)["sim_seconds"]
+
+    for load in (None, {"node0": 0.6}):
+        auto = step_time("auto", load)
+        best = min(step_time("soc", load), step_time("host", load))
+        assert auto == pytest.approx(best, rel=1e-9), (load, auto, best)
+    with pytest.raises(ValueError, match="ckpt_path"):
+        ClusterTimeModel(compute_s=1.0, grad_bytes=0.0, ckpt_path="nvme")
+
+
+# ----------------------------------------------------------------------
+# the colocation study (tentpole acceptance)
+# ----------------------------------------------------------------------
+
+HOST_BW, DISC = 16.0, 0.1
+TRAIN_STEPS, N_REQS = 4, 8
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    from repro.configs import get_config
+    from repro.models.params import init_params
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _fabric():
+    return colocation_fabric(2, host_bw=HOST_BW, soc_frac=0.7,
+                             net_bw_per_node=100.0, decode_bw=64.0,
+                             concurrency_discount=DISC)
+
+
+def _serve_tm():
+    return colocation_time_model(0, prefill_units_per_token=0.25,
+                                 decode_units_per_slot=0.25)
+
+
+def _cluster_tm():
+    return ClusterTimeModel(compute_s=0.3, grad_bytes=16.0, ckpt_bytes=8.0,
+                            ckpt_path="soc", tokens_per_step=1024)
+
+
+def _make_engine(small_lm):
+    from repro.serve.engine import StagedServeEngine
+    cfg, params = small_lm
+
+    def make(rt):
+        return StagedServeEngine(cfg, params, slots=2, max_len=64, impl="ref",
+                                 runtime=rt, time_model=_serve_tm(),
+                                 tenant=SERVE)
+    return make
+
+
+def _make_cluster(numeric=None):
+    def make(rt):
+        kw = {}
+        if numeric is not None:
+            kw = dict(step_fn=numeric["step_fn"], params=numeric["params"](),
+                      opt_state=numeric["opt_state"](),
+                      batch_at=numeric["batch_at"])
+        return TrainCluster(2, _cluster_tm(), fabric=rt.fabric, runtime=rt,
+                            ckpt_every=2, tenant=TRAIN, **kw)
+    return make
+
+
+def _requests(cfg, spacing=0.3):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=4, arrival=spacing * i)
+            for i in range(N_REQS)]
+
+
+def _clean_ledger(runtime, external_flows=()):
+    led = runtime.ledger
+    for name in runtime.fabric:
+        for direction in (OUT, IN):
+            reserved = led.reserved(name, direction)
+            external = sum((o if direction == OUT else i)
+                           for (flow, pname), (o, i) in led._by_flow.items()
+                           if pname == name and flow in external_flows)
+            assert reserved == pytest.approx(external, abs=1e-6), \
+                (name, direction, reserved)
+    leftover = {flow for (flow, _), (o, i) in led._by_flow.items()
+                if (o > 0 or i > 0) and flow not in external_flows}
+    assert not leftover, leftover
+
+
+@pytest.fixture(scope="module")
+def colocation_runs(small_lm):
+    """One solo/unmanaged/managed sweep shared by the assertions below
+    (each run is seconds of jax work; the sweep is the experiment)."""
+    cfg, _ = small_lm
+    make_engine = _make_engine(small_lm)
+    make_cluster = _make_cluster()
+    solo_s = solo_serve(_fabric(), make_engine, _requests(cfg))
+    solo_t = solo_train(_fabric(), make_cluster, TRAIN_STEPS)
+
+    unmanaged = Colocation(fabric=_fabric(), make_engine=make_engine,
+                           make_cluster=make_cluster)
+    un = unmanaged.run(_requests(cfg), TRAIN_STEPS)
+
+    managed = Colocation(
+        fabric=_fabric(), make_engine=make_engine, make_cluster=make_cluster,
+        qos=QoSPolicy.serve_train(16.0, 1.0),
+        admission=AdmissionConfig(slo_ttft=1.2 * solo_s["p99_ttft"]))
+    mg = managed.run(_requests(cfg), TRAIN_STEPS)
+    return dict(solo_serve=solo_s, solo_train=solo_t, unmanaged=un,
+                managed=mg, managed_harness=managed,
+                unmanaged_harness=unmanaged)
+
+
+def test_unmanaged_colocation_blows_p99_managed_holds_slo(colocation_runs):
+    """(a) the headline crossover."""
+    r = colocation_runs
+    solo_p99 = r["solo_serve"]["p99_ttft"]
+    assert r["unmanaged"].serve["p99_ttft"] > 2.0 * solo_p99, \
+        (r["unmanaged"].serve, solo_p99)
+    assert r["managed"].serve["p99_ttft"] <= 1.2 * solo_p99, \
+        (r["managed"].serve, solo_p99)
+    # the train tenant keeps >= 80% of its solo throughput under QoS
+    solo_tps = r["solo_train"]["tokens_per_s"]
+    assert r["managed"].train["tokens_per_s"] >= 0.8 * solo_tps, \
+        (r["managed"].train["tokens_per_s"], solo_tps)
+    # all work completed in every configuration
+    for key in ("unmanaged", "managed"):
+        assert r[key].serve["requests"] == N_REQS
+        assert r[key].train["steps"] == TRAIN_STEPS
+
+
+def test_occupancy_attribution_sees_both_tenants(colocation_runs):
+    """The report attributes host:0 occupancy to both tenants (they
+    really did share the path), and the serve-private decode path only
+    to the serve tenant."""
+    occ = colocation_runs["managed"].occupancy
+    assert SERVE in occ["host:0"] and TRAIN in occ["host:0"]
+    assert occ["host:0"][TRAIN] > occ["host:0"][SERVE] > 0.0
+    assert set(occ["serve:decode"]) == {SERVE}
+    assert TRAIN in occ["net"] and SERVE not in occ["net"]
+
+
+def test_colocated_serve_tokens_bit_identical_to_solo(small_lm):
+    """(b) serve half: contention moves TTFT, never the sampled token —
+    under both unmanaged and QoS-weighted sharing."""
+    cfg, _ = small_lm
+    make_engine = _make_engine(small_lm)
+    solo_reqs = _requests(cfg)
+    rt = FabricRuntime(_fabric())
+    eng = make_engine(rt)
+    for q in solo_reqs:
+        eng.submit(q)
+    eng.run()
+    solo_tokens = {q.rid: q.out_tokens for q in solo_reqs}
+
+    for qos in (None, QoSPolicy.serve_train(16.0, 1.0)):
+        reqs = _requests(cfg)
+        Colocation(fabric=_fabric(), make_engine=make_engine,
+                   make_cluster=_make_cluster(), qos=qos,
+                   ).run(reqs, TRAIN_STEPS)
+        for q in reqs:
+            assert q.done and q.out_tokens == solo_tokens[q.rid], q.rid
+
+
+def test_colocated_train_losses_bit_identical_to_solo(small_lm):
+    """(b) train half: the numeric loss stream under colocation —
+    including admission-control cancel + re-issue deferrals — matches
+    the solo cluster bit for bit."""
+    from repro.configs import RunConfig, get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.params import init_params
+    from repro.optim.adamw import adamw_init
+    from repro.train.train_step import make_train_step
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=3e-3, warmup_steps=2, total_steps=12)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    pipeline = TokenPipeline(cfg, shape, seed=0)
+    numeric = dict(
+        step_fn=step_fn, batch_at=pipeline.batch_at,
+        params=lambda: init_params(cfg, jax.random.PRNGKey(0))[0],
+        opt_state=lambda: adamw_init(
+            init_params(cfg, jax.random.PRNGKey(0))[0]))
+    make_cluster = _make_cluster(numeric)
+
+    solo_cluster = make_cluster(FabricRuntime(_fabric()))
+    solo_cluster.tenant = TRAIN
+    solo_cluster.run(TRAIN_STEPS)
+    solo_losses = {h["step"]: h["loss"] for h in solo_cluster.history}
+
+    make_engine = _make_engine(small_lm)
+    solo_s = solo_serve(_fabric(), make_engine, _requests(cfg))
+    harness = Colocation(
+        fabric=_fabric(), make_engine=make_engine, make_cluster=make_cluster,
+        admission=AdmissionConfig(slo_ttft=1.2 * solo_s["p99_ttft"],
+                                  occupancy_limit=0.4,
+                                  watch_paths=("host:0",)))
+    report = harness.run(_requests(cfg), TRAIN_STEPS)
+    assert report.throttles > 0          # deferrals really happened
+    colo_losses = {h["step"]: h["loss"] for h in harness.cluster.history}
+    assert sorted(colo_losses) == sorted(solo_losses) \
+        == list(range(TRAIN_STEPS))
+    for k in solo_losses:
+        assert colo_losses[k] == solo_losses[k], k
+
+
+def test_admission_controller_throttles_and_conserves(small_lm):
+    """(c) equal weights + an occupancy-triggered controller: at least
+    one pause/resume cycle happens, every deferred transfer is
+    re-issued (all steps complete), the serve tail beats unmanaged, and
+    the ledger conserves across every admit/throttle/resume
+    transition."""
+    cfg, _ = small_lm
+    make_engine = _make_engine(small_lm)
+    solo_s = solo_serve(_fabric(), make_engine, _requests(cfg))
+    harness = Colocation(
+        fabric=_fabric(), make_engine=make_engine,
+        make_cluster=_make_cluster(),
+        admission=AdmissionConfig(slo_ttft=1.2 * solo_s["p99_ttft"],
+                                  occupancy_limit=0.4,
+                                  watch_paths=("host:0",)))
+    report = harness.run(_requests(cfg), TRAIN_STEPS)
+    assert report.throttles > 0
+    kinds = [e["event"] for e in report.events]
+    assert "throttle" in kinds and "resume" in kinds
+    assert "transfers_paused" in kinds and "transfers_resumed" in kinds
+    assert report.train["steps"] == TRAIN_STEPS      # deferral, not loss
+    assert report.serve["p99_ttft"] <= 1.3 * solo_s["p99_ttft"]
+    _clean_ledger(harness.runtime)
+
+
+def test_managed_colocation_leaves_clean_ledger(colocation_runs):
+    """(c) weighted sharing: after the managed run every reservation is
+    back in the ledger, on every path and direction."""
+    _clean_ledger(colocation_runs["managed_harness"].runtime)
+    _clean_ledger(colocation_runs["unmanaged_harness"].runtime)

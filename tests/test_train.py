@@ -43,7 +43,11 @@ def test_loss_decreases_and_restart_is_deterministic(tmp_path):
     assert np.allclose(a, b, rtol=1e-4)
 
 
-def test_failure_midrun_raises_then_recovers(tmp_path):
+def test_failure_midrun_detects_event_driven_then_recovers(tmp_path):
+    """fail_at no longer raises from the step loop on the wall clock:
+    the node goes *silent*, the FaultToleranceManager watchdog expires
+    on the simulated clock, and the detection surfaces as NodeFailure."""
+    from repro.ft.manager import NodeFailure
     cfg = get_config("internlm2-1.8b").reduced()
     run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=30)
     shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
@@ -51,9 +55,15 @@ def test_failure_midrun_raises_then_recovers(tmp_path):
     step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
     ckpt = CheckpointManager(str(tmp_path), every=5, keep=3)
     tr = Trainer(cfg, run, shape, step_fn=step_fn, params=params,
-                 opt_state=adamw_init(params), ckpt=ckpt)
-    with pytest.raises(RuntimeError, match="simulated node failure"):
+                 opt_state=adamw_init(params), ckpt=ckpt, ft_timeout=1.0)
+    with pytest.raises(NodeFailure, match="failure detected"):
         tr.run_steps(20, fail_at=12)
+    # the watchdog fired exactly one timeout after the last heartbeat,
+    # in simulated time, and recorded the failure event
+    assert [e["event"] for e in tr.ft.events] == ["node_failed"]
+    last_hb = tr.ft.nodes["self"].last_heartbeat
+    assert tr.runtime.clock.now == pytest.approx(last_hb + 1.0, rel=1e-6)
+    assert not tr.ft.nodes["self"].alive
     ckpt.wait()
     # recovery path = fresh trainer against the same ckpt dir
     params2, _ = init_params(cfg, jax.random.PRNGKey(0))
@@ -62,6 +72,29 @@ def test_failure_midrun_raises_then_recovers(tmp_path):
     assert tr2.start_step == 11      # ckpt at step 10
     tr2.run_steps(3)
     assert len(tr2.history) == 3
+
+
+def test_long_simulated_step_does_not_false_positive_watchdog():
+    """Regression: heartbeats are a periodic runtime process, so a
+    simulated step longer than ft_timeout must not let the watchdog
+    expire under a healthy node — detection still lands exactly one
+    timeout after the last heartbeat once the node really goes silent."""
+    from repro.ft.manager import NodeFailure
+    from repro.train.cluster import ClusterTimeModel
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    tm = ClusterTimeModel(compute_s=3.0, grad_bytes=0.0, tokens_per_step=128)
+    tr = Trainer(cfg, run, shape, step_fn=step_fn, params=params,
+                 opt_state=adamw_init(params), time_model=tm, ft_timeout=1.0)
+    with pytest.raises(NodeFailure, match="failure detected"):
+        tr.run_steps(5, fail_at=3)
+    assert [e["event"] for e in tr.ft.events] == ["node_failed"]
+    last_hb = tr.ft.nodes["self"].last_heartbeat
+    assert tr.runtime.clock.now == pytest.approx(last_hb + 1.0, rel=1e-6)
+    assert tr.runtime.clock.now > 3 * 3.0   # not the step-0 timestamp
 
 
 def test_int8_moments_track_f32():

@@ -1,0 +1,106 @@
+"""SoC compute tier: compression-offload crossover + KV filter win.
+
+Three rows of story, all on the shared ledger (timing-only; the numeric
+stream is exercised by tests/test_offload.py):
+
+* the host-vs-SoC checkpoint-compression crossover as a host-load
+  sweep — idle, the host's fat cores and fast wire win; as background
+  host-path load grows, compress-on-the-DCA-then-stage-over-the-SoC-wire
+  takes over (nothing hardcodes the flip, it emerges from scheduling);
+* the host-cycles-saved / offload-hit accounting of the SoC runs in the
+  smartnic_offload.py idiom;
+* the DrTM-KV get/put filter: host placement wins an idle fabric, SoC
+  placement wins once a serving tenant holds the host path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.offload import (HOST_FILTER, SOC_FILTER, KVFilter,
+                           plan_filter_placement)
+from repro.serve.disagg import DisaggKV, KVStoreParams
+from repro.train.cluster import (ClusterTimeModel, HOST_COMPRESS,
+                                 SOC_COMPRESS, TrainCluster)
+
+from benchmarks.common import row
+
+STEPS, NODES, CKPT_EVERY = 2, 2, 2
+
+
+def _ckpt_run(mode: str, load: float):
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e6, ckpt_bytes=8e9,
+                          ckpt_path=mode, tokens_per_step=4096 * 16)
+    host_load = {f"node{i}": load for i in range(NODES)} if load else None
+    cluster = TrainCluster(NODES, tm, ckpt_every=CKPT_EVERY,
+                           host_load=host_load)
+    seconds = cluster.run(STEPS)["sim_seconds"]
+    return cluster, seconds
+
+
+def crossover_part() -> None:
+    """Checkpoint compression placement vs background host-path load."""
+    labels = {0.0: "idle", 0.3: "load30", 0.5: "load50", 0.7: "busy"}
+    for load, label in labels.items():
+        _, soc_s = _ckpt_run(SOC_COMPRESS, load)
+        _, host_s = _ckpt_run(HOST_COMPRESS, load)
+        winner = "soc-compress" if soc_s < host_s else "host-compress"
+        row(f"offload/ckpt_soc_compress_{label}", soc_s * 1e6,
+            f"host_load={load:.0%}")
+        row(f"offload/ckpt_host_compress_{label}", host_s * 1e6,
+            f"host_load={load:.0%} winner={winner} "
+            f"delta={abs(soc_s - host_s) / max(soc_s, host_s):.1%}")
+
+
+def cycles_part() -> None:
+    """What the busy-regime SoC placement buys, in the
+    smartnic_offload.py accounting idiom."""
+    cluster, seconds = _ckpt_run(SOC_COMPRESS, 0.7)
+    s = cluster.offload.get_performance_stats()
+    row("offload/cycles_saved", s["cpu_cycles_saved"] / 1e6,
+        f"ops_offhost={s['cpu_cycles_saved']:.3g} "
+        f"compressions={s['compression_operations_offloaded']} "
+        f"ratio={s['compression_ratio']:.2f}")
+    auto_cluster, auto_s = _ckpt_run("auto", 0.7)
+    best = min(auto_s, seconds, _ckpt_run(HOST_COMPRESS, 0.7)[1])
+    row("offload/ckpt_auto_busy", auto_s * 1e6,
+        f"vs_best={auto_s / best:.3f}x")
+
+
+def kvfilter_part() -> None:
+    """Filtered scans: same predicate, same results, placement-dependent
+    seconds — and the flip once a serve tenant holds the host path."""
+    kv = DisaggKV(KVStoreParams(n_keys=5000, soc_cache_keys=500), seed=0)
+    keys = kv.zipf_keys(2000, seed=11)
+    predicate = lambda vals: vals[:, 0] < 64          # noqa: E731  ~25% pass
+    filt = KVFilter(kv)
+    fab = kv.fabric()
+    led = fab.ledger()
+    led.reserve("host_read", out=0.8 * fab["host_read"].capacity,
+                flow="serve")
+    for label, ledger in (("idle", None), ("busy", led)):
+        host = filt.scan(keys, predicate, where=HOST_FILTER, ledger=ledger)
+        soc = filt.scan(keys, predicate, where=SOC_FILTER, ledger=ledger)
+        plan = plan_filter_placement(fab, selectivity=soc.matched / soc.scanned,
+                                     costs=kv.c, ledger=ledger)
+        assert np.array_equal(host.keys, soc.keys)    # placement moves cycles
+        row(f"offload/kvfilter_host_{label}", host.seconds * 1e6,
+            f"scanned={host.scanned}")
+        row(f"offload/kvfilter_soc_{label}", soc.seconds * 1e6,
+            f"matched={soc.matched} plan={plan.location} "
+            f"winner={HOST_FILTER if host.seconds < soc.seconds else SOC_FILTER}")
+    s = filt.stats.get_performance_stats()
+    row("offload/kvfilter_hit_rate", s["offload_hit_rate"] * 1e2,
+        f"packets_offloaded={s['packets_offloaded']} "
+        f"of {s['packets_total']}")
+
+
+def main() -> None:
+    print("# SoC compute tier: compression crossover / cycles saved / "
+          "KV filter")
+    crossover_part()
+    cycles_part()
+    kvfilter_part()
+
+
+if __name__ == "__main__":
+    main()

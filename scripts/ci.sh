@@ -1,23 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
-# plus the runtime/train/colocation/kvserve benchmark sections with
-# schema-validated JSON output (BENCH_5.json — the PR-5 perf trajectory
-# record).
-#   scripts/ci.sh            # tests + runtime,train,colocation,kvserve
+# plus the runtime/train/colocation/kvserve/offload benchmark sections
+# with schema-validated JSON output (BENCH_6.json — the PR-6 perf
+# trajectory record).
+#   scripts/ci.sh            # tests + runtime,train,colocation,kvserve,offload
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_5.json \
-    --only runtime,train,colocation,kvserve
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_6.json \
+    --only runtime,train,colocation,kvserve,offload
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_5.json") as f:
+with open("BENCH_6.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -45,12 +45,19 @@ else:
                      "colocation/serve_unmanaged_p99",
                      "colocation/serve_managed_p99",
                      "colocation/train_solo", "colocation/train_unmanaged",
-                     "colocation/train_managed"):
+                     "colocation/train_managed",
+                     "offload/ckpt_soc_compress_idle",
+                     "offload/ckpt_host_compress_idle",
+                     "offload/ckpt_soc_compress_busy",
+                     "offload/ckpt_host_compress_busy",
+                     "offload/cycles_saved",
+                     "offload/kvfilter_host_busy",
+                     "offload/kvfilter_soc_busy"):
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_5.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_5.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_6.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_6.json OK ({len(doc['rows'])} rows)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

@@ -31,38 +31,34 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zlib
 
-try:  # optional: fall back to zlib when the wheel is absent
-    import zstandard as zstd
-except ImportError:
-    zstd = None
+from repro.core.compression import BYTE_CODECS, byte_codec, default_codec
 
 PyTree = Any
 
-# codec name -> (extension, compress fn, decompress fn); recorded in the
-# manifest so a checkpoint written with one codec restores anywhere.
-_CODECS = {
-    "zstd": (".zst",
-             lambda b: zstd.ZstdCompressor(level=3).compress(b),
-             lambda b: zstd.ZstdDecompressor().decompress(b)),
-    "zlib": (".zz",
-             lambda b: zlib.compress(b, 6),
-             lambda b: zlib.decompress(b)),
-    "none": ("", lambda b: b, lambda b: b),
-}
+# compat alias: the codec table now lives in core/compression.py so the
+# offload tier (offload/compression.py) runs the *same* callables.
+_CODECS = BYTE_CODECS
 
 
-def default_codec(compress: bool) -> str:
-    if not compress:
-        return "none"
-    return "zstd" if zstd is not None else "zlib"
+@dataclass(frozen=True)
+class StagingOption:
+    """A staging strategy for ``choose_staging`` to cost against live
+    occupancy: the wire a save crosses, how many bytes per raw byte it
+    puts there (``wire_scale`` < 1 when compressed first), and the
+    optional ops/s resource that runs the codec."""
+    name: str                       # tag returned when this option wins
+    path: str                       # wire resource the staged bytes cross
+    wire_scale: float = 1.0         # wire bytes per raw checkpoint byte
+    compute: Optional[str] = None   # ops/s resource running the codec
+    ops_scale: float = 0.0          # codec ops per raw checkpoint byte
 
 
 def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
@@ -76,8 +72,17 @@ def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
 
 
 def save_checkpoint(path: str, tree: PyTree, *, step: int,
-                    compress: bool = True, meta: Optional[dict] = None) -> Dict[str, float]:
-    """Writes atomically (COMMIT marker last). Returns size/timing stats."""
+                    compress: bool = True, meta: Optional[dict] = None,
+                    compressor: Optional[Callable[[str, bytes], bytes]] = None,
+                    ) -> Dict[str, float]:
+    """Writes atomically (COMMIT marker last). Returns size/timing stats.
+
+    ``compressor(codec_name, raw) -> payload`` reroutes the codec run —
+    e.g. through an offload tenant that accounts the cycles on the SoC —
+    but must return the same bytes the named codec would (the manifest
+    hash is over the payload, so a divergent compressor is caught at
+    restore time on any replica that compressed elsewhere).
+    """
     t0 = time.monotonic()
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -90,7 +95,7 @@ def save_checkpoint(path: str, tree: PyTree, *, step: int,
     raw = buf.getvalue()
     codec = default_codec(compress)
     ext, comp, _ = _CODECS[codec]
-    payload = comp(raw)
+    payload = compressor(codec, raw) if compressor is not None else comp(raw)
     fname = "data.npz" + ext
     with open(os.path.join(tmp, fname), "wb") as f:
         f.write(payload)
@@ -125,9 +130,7 @@ def load_checkpoint(path: str, like: PyTree) -> Tuple[PyTree, int]:
         manifest = msgpack.unpackb(f.read())
     # checkpoints from before the codec header used zstd whenever compressed
     codec = manifest.get("codec", "zstd" if manifest["compress"] else "none")
-    if codec == "zstd" and zstd is None:
-        raise IOError(f"checkpoint {path} needs the zstandard module")
-    ext, _, decomp = _CODECS[codec]
+    ext, _, decomp = byte_codec(codec)   # raises IOError if zstd absent
     with open(os.path.join(path, "data.npz" + ext), "rb") as f:
         payload = f.read()
     if hashlib.sha256(payload).hexdigest() != manifest["sha256"]:
@@ -153,27 +156,49 @@ class CheckpointManager:
     """
 
     @staticmethod
-    def choose_staging(candidates: List[str], *, ledger=None,
-                       direction: str = "out",
+    def choose_staging(candidates: List[Union[str, StagingOption]], *,
+                       ledger=None, direction: str = "out",
                        fallback: Optional[str] = None) -> str:
-        """Pick the staging path for one save from *live* occupancy.
+        """Pick the staging strategy for one save from *live* occupancy.
 
         The paper's §6.1 lesson is that the right staging path (direct
         host PCIe vs the weaker SoC DMA engine) depends on what else is
-        on the wire *right now*, not on a startup constant. Given a
-        ``BudgetLedger``, the candidate with the most available
+        on the wire *right now*, not on a startup constant. Plain string
+        candidates are wires: the one with the most available
         ``direction`` budget (discount and current holders included)
-        wins; ties keep candidate order, so listing the preferred
-        (faster) path first reproduces the static choice on an idle
-        fabric. Without a ledger the static ``fallback`` (or the first
-        candidate) is used — existing call sites keep their behaviour.
+        wins. A ``StagingOption`` is costed per raw byte instead —
+        ``wire_scale`` bytes over its wire plus ``ops_scale`` ops on its
+        compute resource, each at the *available* rate — so
+        compress-then-stage strategies compete with raw staging on equal
+        footing (this is how ``ckpt_path="auto"`` learns that
+        soc-compress wins only when the host side is busy). Returns the
+        winning string, or the winning option's ``name``. Ties keep
+        candidate order, so listing the preferred strategy first
+        reproduces the static choice on an idle fabric. Without a
+        ledger the static ``fallback`` (or the first candidate) is used
+        — existing call sites keep their behaviour.
         """
         if not candidates:
             raise ValueError("choose_staging needs at least one candidate")
+
+        def label(c):
+            return c.name if isinstance(c, StagingOption) else c
+
         if ledger is None:
-            return fallback if fallback is not None else candidates[0]
-        return max(candidates,
-                   key=lambda p: ledger.available(p, direction, joining="ckpt"))
+            return fallback if fallback is not None else label(candidates[0])
+
+        def avail(resource, dirn):
+            return max(ledger.available(resource, dirn, joining="ckpt"), 1e-30)
+
+        def cost(c) -> float:           # seconds per raw byte, lower wins
+            if isinstance(c, StagingOption):
+                s = c.wire_scale / avail(c.path, direction)
+                if c.compute is not None and c.ops_scale > 0.0:
+                    s += c.ops_scale / avail(c.compute, "out")
+                return s
+            return 1.0 / avail(c, direction)
+
+        return label(min(candidates, key=cost))
 
     def __init__(self, directory: str, *, every: int = 100, keep: int = 2,
                  compress: bool = True, replicas: int = 0,

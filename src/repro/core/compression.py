@@ -11,10 +11,54 @@ path; DrTM-KV: small payloads win).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+import zlib
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+try:  # optional: fall back to zlib when the wheel is absent
+    import zstandard as zstd
+except ImportError:
+    zstd = None
+
+
+# ----------------------------------------------------------------------
+# byte codecs — the checkpoint payload compressors. Canonical registry:
+# ckpt/checkpoint.py records the codec name in every manifest, and
+# offload/compression.py runs these *same* callables as SoC/DCA tenants
+# (placement moves the simulated cycles, never the bytes — compressed
+# output is bit-identical wherever it runs).
+# ----------------------------------------------------------------------
+
+#: codec name -> (extension, compress fn, decompress fn)
+BYTE_CODECS: Dict[str, Tuple[str, Callable[[bytes], bytes],
+                             Callable[[bytes], bytes]]] = {
+    "zstd": (".zst",
+             lambda b: zstd.ZstdCompressor(level=3).compress(b),
+             lambda b: zstd.ZstdDecompressor().decompress(b)),
+    "zlib": (".zz",
+             lambda b: zlib.compress(b, 6),
+             lambda b: zlib.decompress(b)),
+    "none": ("", lambda b: b, lambda b: b),
+}
+
+
+def byte_codec(name: str) -> Tuple[str, Callable[[bytes], bytes],
+                                   Callable[[bytes], bytes]]:
+    """Look up a byte codec, failing early when the backing wheel is
+    absent (a zstd-written checkpoint cannot restore without it)."""
+    if name not in BYTE_CODECS:
+        raise KeyError(f"unknown codec {name!r} (have {sorted(BYTE_CODECS)})")
+    if name == "zstd" and zstd is None:
+        raise IOError("codec 'zstd' needs the zstandard module")
+    return BYTE_CODECS[name]
+
+
+def default_codec(compress: bool) -> str:
+    if not compress:
+        return "none"
+    return "zstd" if zstd is not None else "zlib"
 
 
 class Quantized(NamedTuple):

@@ -50,6 +50,14 @@ OPS_PER_S = "ops/s"
 OUT, IN = "out", "in"
 _DIRS = (OUT, IN)
 
+#: path kinds with first-class meaning to the offload tier: a compute
+#: resource (host cores / SoC ARM complex) and a DCA-style datapath
+#: accelerator ("Demystifying Datapath Accelerator Enhanced Off-path
+#: SmartNIC", PAPERS.md) — a fixed-function engine that is neither a
+#: wire nor a general core, with its own ops/s budget.
+COMPUTE = "compute"
+DCA = "dca"
+
 
 class FabricError(ValueError):
     """Unknown path, unit mismatch, or malformed alternative."""
@@ -100,6 +108,36 @@ class Path:
         if amount <= 0:
             return 0.0
         return self.latency + amount / self.capacity
+
+    @property
+    def is_compute(self) -> bool:
+        """True for compute-tier resources (SoC cores, DCA engines):
+        ops/s paths with no opposite direction — work is executed, not
+        echoed back."""
+        return self.units == OPS_PER_S and not self.bidirectional
+
+
+def compute_path(name: str, ops_per_s: float, *, latency: float = 0.0,
+                 shared_group: Optional[str] = None,
+                 kind: str = COMPUTE) -> Path:
+    """A compute resource as a fabric Path: ``ops_per_s`` is the
+    device's roofline (for byte-granular work like compression, one op
+    == one byte processed). Unidirectional — a ``Compute`` reservation
+    draws on the OUT budget only — so the same ledger/fair-share/QoS
+    machinery that governs wires governs cores."""
+    return Path(name, ops_per_s, OPS_PER_S, latency=latency,
+                bidirectional=False, shared_group=shared_group, kind=kind)
+
+
+def dca_path(name: str, ops_per_s: float, *, latency: float = 0.0,
+             shared_group: Optional[str] = None) -> Path:
+    """A DCA-style datapath-accelerator path (kind=``dca``): the
+    fixed-function engine class of "Demystifying Datapath Accelerator
+    Enhanced Off-path SmartNIC" — much higher ops/s than the SoC's
+    wimpy cores, lower dispatch latency, but only for the operations it
+    implements (the caller decides eligibility)."""
+    return compute_path(name, ops_per_s, latency=latency,
+                        shared_group=shared_group, kind=DCA)
 
 
 class Fabric(Mapping):
@@ -244,6 +282,7 @@ class Alternative:
     compute_rate: float = math.inf     # units of work/s the endpoint sustains
     criteria: Dict[str, float] = field(default_factory=dict)
     # e.g. {"host_cpu": 0.2, "latency_us": 4.6, "net_utilization": 1.0}
+    tenant: Optional[str] = None       # QoS tag for weighted allocation
 
     def solo_rate(self, fabric: Mapping,
                   ledger: Optional["BudgetLedger"] = None) -> float:
@@ -438,12 +477,22 @@ class MultipathRouter:
     def allocate(self, alts_ranked: Sequence[Alternative],
                  demand: float = math.inf,
                  *, ledger: Optional[BudgetLedger] = None,
-                 ) -> Tuple[List[Allocation], float]:
+                 qos=None) -> Tuple[List[Allocation], float]:
         """Give each alternative in order as much rate as the remaining
         budgets allow; stop when demand is met or everything saturates.
         Mutates `ledger` if given (so callers can pre-reserve primary
-        traffic); returns (allocations, total_rate)."""
+        traffic); returns (allocations, total_rate).
+
+        With ``qos`` (any object exposing ``weight(tenant) -> float``,
+        see tenancy/qos.QoSPolicy), the allocation switches from
+        in-order greedy to *weighted max-min* over the alternatives'
+        ``tenant`` tags — the same progressive-filling split the
+        FabricRuntime applies to live transfers, so a static plan and
+        the converged runtime shares agree under tenancy (asserted in
+        tests/test_offload.py)."""
         led = ledger if ledger is not None else self.fabric.ledger()
+        if qos is not None:
+            return self._allocate_weighted(alts_ranked, demand, led, qos)
         allocs: List[Allocation] = []
         total = 0.0
         for alt in alts_ranked:
@@ -471,6 +520,121 @@ class MultipathRouter:
             total += rate
             allocs.append(Allocation(alt.name, rate, bottleneck))
         return allocs, total
+
+    def _allocate_weighted(self, alts: Sequence[Alternative], demand: float,
+                           led: BudgetLedger, qos,
+                           ) -> Tuple[List[Allocation], float]:
+        """Progressive filling: every unfrozen alternative's rate rises
+        in proportion to its tenant's QoS weight until a shared resource
+        saturates (its users freeze with that bottleneck), a compute cap
+        binds, or the aggregate demand is met — the static-plan twin of
+        ``FabricRuntime._rebalance``'s weighted max-min. The §4.1
+        discount applies per interference group iff the group ends up
+        with more than one distinct flow (allocated alternatives plus
+        live ledger holders), exactly as the runtime counts it."""
+        alts = list(alts)
+        for alt in alts:
+            self.fabric.validate(alt)
+            if not alt.uses and not math.isfinite(alt.compute_rate):
+                raise FabricError(
+                    f"alternative {alt.name} is unbounded: no use and no "
+                    "compute cap")
+        weights = [float(qos.weight(alt.tenant)) for alt in alts]
+        # per-(path, dir) demand of one work unit of each alternative
+        unit: List[Dict[Tuple[str, str], float]] = []
+        for alt in alts:
+            d: Dict[Tuple[str, str], float] = {}
+            for u in alt.uses:
+                if u.out > 0:
+                    d[(u.path, OUT)] = d.get((u.path, OUT), 0.0) + u.out
+                if u.in_ > 0:
+                    d[(u.path, IN)] = d.get((u.path, IN), 0.0) + u.in_
+            unit.append(d)
+        # group -> flows that will be on it: allocated alts + ledger holders
+        flows_on: Dict[str, Set[str]] = {}
+        for alt, d in zip(alts, unit):
+            for (pname, _dir) in d:
+                flows_on.setdefault(self.fabric[pname].group, set()).add(alt.name)
+        avail: Dict[Tuple[str, str], float] = {}
+        for d in unit:
+            for (pname, direction) in d:
+                if (pname, direction) in avail:
+                    continue
+                cap = self.fabric.direction_capacity(pname, direction)
+                group = self.fabric[pname].group
+                flows = flows_on.get(group, set()) | led.holders(pname)
+                if len(flows) > 1 and self.fabric.concurrency_discount > 0.0:
+                    cap *= 1.0 - self.fabric.concurrency_discount
+                avail[(pname, direction)] = \
+                    max(0.0, cap - led.reserved(pname, direction))
+        rates = [0.0] * len(alts)
+        bottleneck = [""] * len(alts)
+        active = [i for i in range(len(alts)) if weights[i] > 0]
+        for i in range(len(alts)):
+            if weights[i] <= 0:
+                bottleneck[i] = "weight"
+        total = 0.0
+        eps = 1e-12
+        while active:
+            # largest uniform step theta: rate_i += theta * w_i for all
+            # active i, bounded by every touched resource, each compute
+            # cap, and the remaining aggregate demand
+            theta = math.inf
+            binder: Optional[str] = None
+            for (pname, direction), cap_left in avail.items():
+                usage = sum(weights[i] * unit[i].get((pname, direction), 0.0)
+                            for i in active)
+                if usage > eps:
+                    t = cap_left / usage
+                    if t < theta:
+                        theta, binder = t, f"{pname}:{direction}"
+            for i in active:
+                if math.isfinite(alts[i].compute_rate):
+                    t = (alts[i].compute_rate - rates[i]) / weights[i]
+                    if t < theta:
+                        theta, binder = t, "compute"
+            if math.isfinite(demand):
+                wsum = sum(weights[i] for i in active)
+                t = (demand - total) / wsum if wsum > 0 else 0.0
+                if t < theta:
+                    theta, binder = t, "demand"
+            if not math.isfinite(theta):
+                raise FabricError("weighted allocation is unbounded: active "
+                                  "alternatives have no binding resource")
+            theta = max(theta, 0.0)
+            for i in active:
+                step = theta * weights[i]
+                rates[i] += step
+                total += step
+                for key, amt in unit[i].items():
+                    avail[key] = max(0.0, avail[key] - step * amt)
+            # freeze: saturated resources stop their users; compute caps
+            # and demand stop whoever they bind
+            still = []
+            for i in active:
+                stop = None
+                if binder == "demand":
+                    stop = "demand"
+                elif binder == "compute" \
+                        and rates[i] >= alts[i].compute_rate - eps:
+                    stop = "compute"
+                else:
+                    for key in unit[i]:
+                        if avail[key] <= eps:
+                            stop = f"{key[0]}:{key[1]}"
+                            break
+                if stop is None:
+                    still.append(i)
+                else:
+                    bottleneck[i] = stop
+            if len(still) == len(active):   # theta made no one freeze
+                break
+            active = still
+        for alt, rate in zip(alts, rates):
+            if rate > 0:
+                led.reserve_alternative(alt, rate)
+        return [Allocation(alt.name, rate, bn)
+                for alt, rate, bn in zip(alts, rates, bottleneck)], total
 
     def route(self, alts: Sequence[Alternative], demand: float = math.inf,
               *, key: str = "rate", prefer: Optional[Sequence[str]] = None,

@@ -19,6 +19,12 @@ captures exactly that:
                   overlapping flows each see
                   ``capacity * (1 - discount) / 2``, not a constant
                   factor applied by a call site.
+``Compute``       the ops/s analog of ``Transfer`` on a *compute*
+                  resource (SoC ARM cores, a DCA engine — see
+                  fabric.compute_path): total ops fair-share the
+                  device roofline in the same ledger, so compute
+                  occupancy, QoS weighting and conservation follow the
+                  exact rules wires do.
 ``Process``       a generator-driven coroutine. Yield a ``Transfer``
                   (resume on completion), a number (resume after that
                   many simulated seconds), a ``Signal`` (resume when
@@ -61,7 +67,8 @@ import itertools
 import math
 from typing import (Any, Callable, Dict, Generator, List, Optional, Tuple)
 
-from repro.core.fabric import (BudgetLedger, Fabric, FabricError, IN, OUT)
+from repro.core.fabric import (BudgetLedger, Fabric, FabricError, IN, OUT,
+                               OPS_PER_S)
 
 
 class Event:
@@ -199,6 +206,43 @@ class Transfer:
         state = ("canceled" if self.canceled else "done") if self.done \
             else f"{self.remaining:.3g} left @ {self.rate:.3g}/s"
         return f"Transfer({self.path}:{self.direction}, {self.amount:.3g}, {state})"
+
+
+class Compute(Transfer):
+    """An in-flight batch of work on one *compute* resource — the ops/s
+    analog of ``Transfer`` (paper premise: the off-path SoC computes,
+    it does not just move bytes).
+
+    The resource is an ops/s ``Path`` (see fabric.compute_path /
+    dca_path): ``amount`` is total ops, ``rate`` the current fair share
+    of the device's roofline, and the reservation lives in the same
+    ``BudgetLedger`` as every wire — so compute occupancy shows up in
+    ``FabricRuntime.occupancy()``, QoS weights apply per tenant, the
+    §4.1 discount emerges on a ``shared_group`` (e.g. SoC cores sharing
+    a memory system with the DMA engine), and conservation is the same
+    invariant (asserted in tests/test_offload.py). ``ops``/``ops_done``
+    are the domain-named views of amount/progress."""
+    _ids = itertools.count()
+
+    def __init__(self, runtime: "FabricRuntime", resource: str, ops: float,
+                 *, flow: Optional[str] = None, max_rate: float = math.inf,
+                 tenant: Optional[str] = None):
+        flow = flow if flow is not None else f"comp-{next(self._ids)}"
+        super().__init__(runtime, resource, ops, direction=OUT, flow=flow,
+                         max_rate=max_rate, tenant=tenant)
+
+    @property
+    def ops(self) -> float:
+        return self.amount
+
+    @property
+    def ops_done(self) -> float:
+        return self.amount - self.remaining
+
+    def __repr__(self) -> str:
+        state = ("canceled" if self.canceled else "done") if self.done \
+            else f"{self.remaining:.3g} ops left @ {self.rate:.3g}/s"
+        return f"Compute({self.path}, {self.amount:.3g} ops, {state})"
 
 
 class Process:
@@ -380,9 +424,36 @@ class FabricRuntime:
             raise FabricError(f"path {path} has no {IN} budget")
         t = Transfer(self, path, amount, direction=direction, flow=flow,
                      max_rate=max_rate, tenant=tenant)
+        return self._dispatch(t, delay + p.latency, on_complete)
+
+    def compute(self, resource: str, ops: float, *,
+                flow: Optional[str] = None, max_rate: float = math.inf,
+                delay: float = 0.0, tenant: Optional[str] = None,
+                on_complete: Optional[Callable[[Transfer], None]] = None,
+                ) -> Compute:
+        """Execute ``ops`` operations on a compute resource (an ops/s
+        path — fabric.compute_path / dca_path). The resource's
+        ``latency`` models dispatch cost (doorbell/DMA descriptor for a
+        DCA engine, IPI for the ARM cores); then the work joins the
+        per-resource fair-share pool like any flow: concurrent programs
+        on one SoC split its roofline by QoS weight, and the
+        reservation is conserving in the shared ledger."""
+        if resource not in self.fabric:
+            raise FabricError(f"unknown compute resource {resource!r} "
+                              f"(fabric has {sorted(self.fabric)})")
+        p = self.fabric[resource]
+        if p.units != OPS_PER_S:
+            raise FabricError(
+                f"{resource} is a {p.units} path, not a compute resource "
+                f"(expected {OPS_PER_S}; see fabric.compute_path)")
+        c = Compute(self, resource, ops, flow=flow, max_rate=max_rate,
+                    tenant=tenant)
+        return self._dispatch(c, delay + p.latency, on_complete)
+
+    def _dispatch(self, t: Transfer, lead: float,
+                  on_complete: Optional[Callable[[Transfer], None]]):
         if on_complete is not None:
             t.add_callback(on_complete)
-        lead = delay + p.latency
         if lead > 0:
             self.clock.schedule(lead, self._begin, t)
         else:

@@ -99,6 +99,12 @@ def simulate(cfg, shape, args):
           f"{summary['sim_seconds']:.3f}s simulated "
           f"-> {summary.get('tokens_per_s', 0.0):,.0f} tokens/s "
           f"({len(cluster.straggler.stragglers())} stragglers flagged)")
+    off = cluster.offload.get_performance_stats()
+    if off["compression_bytes_in"]:
+        print(f"[simulate] offload: "
+              f"{off['compression_operations_offloaded']} saves compressed "
+              f"off-host, cycles_saved={off['cpu_cycles_saved']:.3g}, "
+              f"ratio={off['compression_ratio']:.2f}")
     return cluster
 
 
@@ -126,9 +132,13 @@ def main(argv=None):
                     help="named fabric for --simulate "
                          "(v5e | weak-soc | fast-net | linefs)")
     ap.add_argument("--ckpt-staging", default="soc",
-                    choices=["soc", "host", "auto"],
-                    help="--simulate: checkpoint staging path (auto = "
-                         "per-save ledger-occupancy choice)")
+                    choices=["soc", "host", "auto", "soc-compress",
+                             "host-compress"],
+                    help="--simulate: checkpoint staging mode (auto = "
+                         "per-save ledger-occupancy choice over wires "
+                         "AND compress-then-stage; *-compress = run the "
+                         "codec on that side's device, stage only the "
+                         "compressed bytes)")
     ap.add_argument("--host-load", default="",
                     help="--simulate: NODE:FRAC background host-path load, "
                          "e.g. node0:0.6")

@@ -260,6 +260,18 @@ class DisaggKV:
         router = MultipathRouter(self.fabric())
         return router.blend([(alts["A5"], m), (alts["A4"], 1.0 - m)])
 
+    def filtered_scan(self, keys, predicate, *, where: str = "soc-filter",
+                      ledger=None, stats=None):
+        """DrTM-KV get/put filtering (the offload tier's §5.2 workload):
+        run ``predicate`` over the candidate values on the SoC cores so
+        only matches cross the wire (``where="soc-filter"``), or read
+        everything over the host path and filter client-side
+        (``where="host-filter"``). Results are bit-identical either way;
+        see offload/kvfilter.KVFilter for the placement planner."""
+        from repro.offload.kvfilter import KVFilter
+        return KVFilter(self, stats=stats).scan(keys, predicate,
+                                                where=where, ledger=ledger)
+
     def zipf_keys(self, n: int, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
         # standard YCSB zipfian over key ranks

@@ -31,8 +31,10 @@ LATENCY = "latency"
 THROUGHPUT = "throughput"
 _CLASSES = (LATENCY, THROUGHPUT)
 
-#: canonical tenant tags used by the colocation harness
+#: canonical tenant tags used by the colocation harness; OFFLOAD tags
+#: the SoC compute tier's programs (offload/) when they share a fabric
 SERVE, TRAIN = "serve", "train"
+OFFLOAD = "offload"
 
 
 @dataclass(frozen=True)
@@ -105,3 +107,15 @@ class QoSPolicy:
         path it contends on, over a throughput-class train tenant."""
         return cls([Tenant(SERVE, LATENCY, serve_weight),
                     Tenant(TRAIN, THROUGHPUT, train_weight)])
+
+    @classmethod
+    def serve_train_offload(cls, serve_weight: float = 16.0,
+                            train_weight: float = 1.0,
+                            offload_weight: float = 2.0) -> "QoSPolicy":
+        """``serve_train`` plus the offload tier as a third
+        throughput-class tenant: SoC programs (checkpoint compression,
+        KV filtering) get a modest weight so they drain promptly on the
+        devices they own without starving train staging on the wires
+        they share."""
+        return cls.serve_train(serve_weight, train_weight).add(
+            Tenant(OFFLOAD, THROUGHPUT, offload_weight))

@@ -55,31 +55,49 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import hw
-from repro.core.fabric import Fabric, OUT, IN, Path
+from repro.core.fabric import Fabric, FabricError, OUT, IN, Path
 from repro.core.runtime import Barrier, FabricRuntime, Process, Transfer
-from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.checkpoint import CheckpointManager, StagingOption
 from repro.ft.elastic import best_mesh_for
 from repro.ft.manager import FaultToleranceManager
 from repro.ft.straggler import StragglerDetector
+from repro.offload.compression import CKPT_RATIO
+from repro.offload.device import node_compute_paths
+from repro.offload.program import OffloadStats
 
 SOC, HOST = "soc", "host"
 AUTO = "auto"     # ckpt staging: pick per save from live ledger occupancy
+#: compress-then-stage modes (offload tier): run the codec where the
+#: cycles live — the NIC's DCA engine or the host socket — then stage
+#: only the compressed bytes over that side's wire
+SOC_COMPRESS, HOST_COMPRESS = "soc-compress", "host-compress"
+_COMPRESS_MODES = (SOC_COMPRESS, HOST_COMPRESS)
+_CKPT_MODES = (SOC, HOST, AUTO) + _COMPRESS_MODES
 
 
 def train_fabric(nodes: int, *, host_bw: float = hw.PCIE_BW,
                  soc_frac: float = 0.7,
                  net_bw_per_node: float = hw.DCN_BW_PER_CHIP,
-                 concurrency_discount: float = 0.1) -> Fabric:
+                 concurrency_discount: float = 0.1,
+                 compute_tier: bool = True) -> Fabric:
     """The cluster fabric: per node a ``host:i`` path (the direct PCIe
     host path, the paper's P) and a weaker ``soc:i`` offload path (the
     SoC DMA engine, §3.3's ~0.7 P) sharing one interference group, plus
-    one switch-aggregated ``net`` path all ring traffic crosses."""
+    one switch-aggregated ``net`` path all ring traffic crosses.
+
+    With ``compute_tier`` (default), each node also carries its compute
+    resources as ops/s paths — ``cpu:host:i``, ``cpu:soc:i`` and
+    ``dca:i`` (offload/device rooflines) — so codec cycles and staging
+    bytes are budgeted in one ledger and the host-vs-SoC compression
+    crossover can emerge from scheduling."""
     paths = []
     for i in range(nodes):
         paths.append(Path(f"host:{i}", host_bw, latency=hw.PCIE_LAT,
                           kind="pcie", shared_group=f"pcie:{i}"))
         paths.append(Path(f"soc:{i}", soc_frac * host_bw, latency=hw.PCIE_LAT,
                           kind="pcie", shared_group=f"pcie:{i}"))
+        if compute_tier:
+            paths.extend(node_compute_paths(i))
     paths.append(Path("net", net_bw_per_node * nodes, latency=hw.DCN_LAT,
                       kind="dcn", shared_group="net"))
     return Fabric(paths, concurrency_discount=concurrency_discount)
@@ -104,13 +122,24 @@ class ClusterTimeModel:
     compute_s: float                 # roofline compute time per step
     grad_bytes: float                # gradient bytes staged host<->device
     ckpt_bytes: float = 0.0          # per-node checkpoint shard bytes
-    ckpt_path: str = SOC             # "soc" | "host" | "auto" staging path
+    ckpt_path: str = SOC             # staging mode, one of _CKPT_MODES
     tokens_per_step: int = 0         # global tokens, for tokens/s
+    ckpt_ratio: float = CKPT_RATIO   # compressed fraction (compress modes)
+    ckpt_codec_ops: float = 1.0      # modeled codec ops per raw byte —
+    #                                  fixed here so the simulation does
+    #                                  not depend on which codec wheel
+    #                                  happens to be installed
 
     def __post_init__(self):
-        if self.ckpt_path not in (SOC, HOST, AUTO):
-            raise ValueError(f"ckpt_path must be '{SOC}', '{HOST}' or "
-                             f"'{AUTO}', got {self.ckpt_path!r}")
+        if self.ckpt_path not in _CKPT_MODES:
+            raise ValueError(f"ckpt_path must be one of {_CKPT_MODES}, "
+                             f"got {self.ckpt_path!r}")
+        if not 0.0 < self.ckpt_ratio <= 1.0:
+            raise ValueError(f"ckpt_ratio must be in (0, 1], "
+                             f"got {self.ckpt_ratio}")
+        if self.ckpt_codec_ops < 0:
+            raise ValueError(f"ckpt_codec_ops must be >= 0, "
+                             f"got {self.ckpt_codec_ops}")
 
     @classmethod
     def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
@@ -193,6 +222,18 @@ class TrainCluster:
         self.mitigate_stragglers = mitigate_stragglers
         self.fail_at = fail_at
         self.tenant = tenant             # QoS tag on every fabric transfer
+        self.offload = OffloadStats()    # host-cycles-saved accounting
+        if time_model.ckpt_path in _COMPRESS_MODES \
+                and time_model.ckpt_bytes > 0:
+            tmpl = "dca:{}" if time_model.ckpt_path == SOC_COMPRESS \
+                else "cpu:host:{}"
+            missing = [tmpl.format(i) for i in range(nodes)
+                       if tmpl.format(i) not in self.fabric]
+            if missing:
+                raise FabricError(
+                    f"ckpt_path={time_model.ckpt_path!r} needs compute "
+                    f"paths {missing} — build the fabric with "
+                    "train_fabric(compute_tier=True)")
         self._paused = False             # admission-control throttle state
         self._resume = self.runtime.signal()
         self.straggler = StragglerDetector()
@@ -247,16 +288,30 @@ class TrainCluster:
         return (self.tm.ckpt_bytes > 0 and self.ckpt_every > 0
                 and step % self.ckpt_every == 0)
 
-    def _staging_path(self, node: ClusterNode) -> str:
-        """This save's checkpoint staging path. ``auto`` asks the ledger
-        which of the node's host/soc paths has the most free outbound
-        budget *right now* (CheckpointManager.choose_staging); a static
-        config keeps the fixed §6.1 choice."""
-        if self.tm.ckpt_path == AUTO:
-            return CheckpointManager.choose_staging(
-                [f"{HOST}:{node.index}", f"{SOC}:{node.index}"],
-                ledger=self.runtime.ledger, direction=OUT)
-        return f"{self.tm.ckpt_path}:{node.index}"
+    def _staging_mode(self, node: ClusterNode) -> str:
+        """This save's staging strategy. ``auto`` costs the node's raw
+        wires *and* — when the fabric carries the compute tier — the
+        compress-then-stage strategies against live wire+compute
+        occupancy (CheckpointManager.choose_staging with
+        StagingOptions); a static config keeps the fixed §6.1 choice."""
+        if self.tm.ckpt_path != AUTO:
+            return self.tm.ckpt_path
+        i, tm = node.index, self.tm
+        cands = [StagingOption(HOST, f"{HOST}:{i}"),
+                 StagingOption(SOC, f"{SOC}:{i}")]
+        ops_per_byte = tm.ckpt_codec_ops
+        if f"dca:{i}" in self.fabric:
+            cands.append(StagingOption(SOC_COMPRESS, f"{SOC}:{i}",
+                                       wire_scale=tm.ckpt_ratio,
+                                       compute=f"dca:{i}",
+                                       ops_scale=ops_per_byte))
+        if f"cpu:host:{i}" in self.fabric:
+            cands.append(StagingOption(HOST_COMPRESS, f"{HOST}:{i}",
+                                       wire_scale=tm.ckpt_ratio,
+                                       compute=f"cpu:host:{i}",
+                                       ops_scale=ops_per_byte))
+        return CheckpointManager.choose_staging(
+            cands, ledger=self.runtime.ledger, direction=OUT)
 
     # -- admission-control throttling ------------------------------------
     def pause_transfers(self) -> None:
@@ -306,6 +361,45 @@ class TrainCluster:
                 return
             remaining = t.remaining
 
+    def _tenant_compute(self, node: ClusterNode, resource: str, ops: float,
+                        flow: str):
+        """``_tenant_xfer`` for compute work: execute ``ops`` on an
+        ops/s resource respecting throttle pauses — a canceled Compute
+        is re-issued with its remaining ops after resume, and the
+        reservation conserves across every transition."""
+        remaining = ops
+        while remaining > 1e-9:
+            while self._paused:
+                yield self._resume
+            c = self.runtime.compute(resource, remaining, flow=flow,
+                                     tenant=self.tenant)
+            node.inflight.append(c)
+            yield c
+            if not c.canceled:
+                return
+            remaining = c.remaining
+
+    def _ckpt_offload(self, node: ClusterNode, mode: str):
+        """One compress-then-stage save (the offload tier on the step
+        path): run the codec ops where the mode places them — the NIC's
+        DCA engine or the host socket — then stage only the compressed
+        bytes over that side's wire. Both stages are pause-safe; the SoC
+        placement credits the codec ops as host cycles saved."""
+        tm, i = self.tm, node.index
+        ops = tm.ckpt_codec_ops * tm.ckpt_bytes
+        wire_bytes = tm.ckpt_ratio * tm.ckpt_bytes
+        if mode == SOC_COMPRESS:
+            compute, wire = f"dca:{i}", f"{SOC}:{i}"
+        else:
+            compute, wire = f"cpu:host:{i}", f"{HOST}:{i}"
+        yield from self._tenant_compute(node, compute, ops,
+                                        f"ckptcomp:{node.name}")
+        yield from self._tenant_xfer(node, wire, wire_bytes, OUT,
+                                     f"ckpt:{node.name}")
+        self.offload.record_compression(
+            int(tm.ckpt_bytes), int(wire_bytes), ops=ops,
+            offloaded=(mode == SOC_COMPRESS))
+
     # -- the per-node step loop -----------------------------------------
     def _node_proc(self, node: ClusterNode):
         rt, tm = self.runtime, self.tm
@@ -322,11 +416,16 @@ class TrainCluster:
             t0 = rt.clock.now
             node.inflight = [t for t in node.inflight if not t.done]
             ck = None
+            ck_mode: Optional[str] = None
             if self._ckpt_step(step) and not self._paused:
-                ck = rt.transfer(self._staging_path(node),
-                                 tm.ckpt_bytes, direction=OUT,
-                                 flow=f"ckpt:{node.name}", tenant=self.tenant)
-                node.inflight.append(ck)
+                ck_mode = self._staging_mode(node)
+                if ck_mode not in _COMPRESS_MODES:
+                    # raw staging early-starts and overlaps the step
+                    ck = rt.transfer(f"{ck_mode}:{node.index}",
+                                     tm.ckpt_bytes, direction=OUT,
+                                     flow=f"ckpt:{node.name}",
+                                     tenant=self.tenant)
+                    node.inflight.append(ck)
             yield tm.compute_s * node.compute_scale * node.share_scale
             if tm.grad_bytes > 0:
                 # sample external host-direction occupancy *before* our
@@ -351,10 +450,16 @@ class TrainCluster:
                     yield from self._tenant_xfer(node, ck.path, ck.remaining,
                                                  OUT, f"ckpt:{node.name}")
             elif self._ckpt_step(step):
-                # the save's start itself was deferred by a pause
-                yield from self._tenant_xfer(node, self._staging_path(node),
-                                             tm.ckpt_bytes, OUT,
-                                             f"ckpt:{node.name}")
+                # a compress-then-stage save, or a save whose start was
+                # deferred by a pause (re-choose the mode at resume)
+                mode = ck_mode if ck_mode is not None \
+                    else self._staging_mode(node)
+                if mode in _COMPRESS_MODES:
+                    yield from self._ckpt_offload(node, mode)
+                else:
+                    yield from self._tenant_xfer(node, f"{mode}:{node.index}",
+                                                 tm.ckpt_bytes, OUT,
+                                                 f"ckpt:{node.name}")
             self.straggler.observe(node.name, rt.clock.now - t0)
             yield self._barrier.arrive()
 

@@ -1,0 +1,578 @@
+"""The SoC compute tier (ISSUE 6) — acceptance assertions:
+
+  (a) the host-vs-SoC compression-offload crossover *emerges* from
+      scheduling: soc-compress beats host-compress when the host side
+      is loaded and loses to it idle;
+  (b) compressed checkpoint bytes are bit-identical across host/SoC
+      placement (placement moves cycles, never bytes);
+  (c) compute-ledger conservation holds on every resource across
+      reserve/cancel/complete/rebalance, weighted or not, and all-equal
+      weights reduce to the equal split (mirror of the transfer
+      properties in test_tenancy.py);
+  (d) QoS-weighted static plans (MultipathRouter.allocate(qos=)) agree
+      with the converged runtime shares under tenancy.
+
+Plus coverage for the satellites: compute-aware choose_staging /
+ckpt_path="auto" with compress-then-stage options, the DrTM-KV filter
+offload and its placement flip under load, device rooflines, and the
+smartnic-idiom OffloadStats.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (CheckpointManager, StagingOption,
+                                   load_checkpoint, save_checkpoint)
+from repro.core.fabric import (Alternative, DCA, Fabric, FabricError, IN,
+                               MultipathRouter, OPS_PER_S, OUT, Path, Use,
+                               compute_path, dca_path)
+from repro.core.runtime import Compute, FabricRuntime
+from repro.offload import (BF2_ARM, BF2_DCA, HOST_CPU, DeviceSpec, KVFilter,
+                           HOST_FILTER, SOC_FILTER, OffloadProgram,
+                           OffloadStats, SoCCompressor, host_compressor,
+                           kv_filter_alternatives, plan_filter_placement)
+from repro.serve.disagg import DisaggKV, KVStoreParams
+from repro.tenancy.qos import (OFFLOAD, QoSPolicy, SERVE, TRAIN, THROUGHPUT,
+                               Tenant)
+from repro.train.cluster import (ClusterTimeModel, HOST_COMPRESS,
+                                 SOC_COMPRESS, TrainCluster, train_fabric)
+
+
+def _clean_ledger(runtime, external_flows=()):
+    """Every reservation is back, on every path and direction, except
+    the declared external flows (same invariant as test_tenancy)."""
+    led = runtime.ledger
+    for name in runtime.fabric:
+        for direction in (OUT, IN):
+            reserved = led.reserved(name, direction)
+            external = sum((o if direction == OUT else i)
+                           for (flow, pname), (o, i) in led._by_flow.items()
+                           if pname == name and flow in external_flows)
+            assert reserved == pytest.approx(external, abs=1e-6), \
+                (name, direction, reserved)
+
+
+# ----------------------------------------------------------------------
+# the Compute primitive (tentpole core)
+# ----------------------------------------------------------------------
+
+def test_compute_primitive_validation_and_occupancy():
+    fab = Fabric.of(Path("wire", 100.0), compute_path("dev", 50.0))
+    rt = FabricRuntime(fab)
+    with pytest.raises(FabricError, match="not a compute resource"):
+        rt.compute("wire", 10.0)
+    with pytest.raises(FabricError, match="unknown compute resource"):
+        rt.compute("gone", 10.0)
+    with pytest.raises(FabricError, match=f"no {IN} budget"):
+        rt.transfer("dev", 10.0, direction=IN)   # compute paths have no IN
+    c = rt.compute("dev", 100.0, tenant=OFFLOAD)
+    seen = {}
+    rt.clock.schedule(0.1, lambda: seen.update(
+        occ=rt.occupancy("dev"), by=rt.occupancy("dev", by_tenant=True)))
+    rt.clock.run()
+    assert isinstance(c, Compute)
+    assert seen["occ"] == pytest.approx(1.0)          # visible in occupancy
+    assert seen["by"] == {OFFLOAD: pytest.approx(1.0)}
+    assert c.done and c.ops_done == pytest.approx(100.0)
+    assert c.finished_at == pytest.approx(2.0)        # 100 ops @ 50/s
+    assert rt.ledger.reserved("dev", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_compute_fair_share_and_qos_weighting():
+    """Two programs on one device split the roofline; with a QoS policy
+    the split follows the tenant weights."""
+    qos = QoSPolicy([Tenant("hi", weight=3.0), Tenant("lo", weight=1.0)])
+    rt = FabricRuntime(Fabric.of(compute_path("dev", 100.0),
+                                 concurrency_discount=0.1), qos=qos)
+    hi = rt.compute("dev", 90.0, tenant="hi")
+    lo = rt.compute("dev", 90.0, tenant="lo")
+    seen = {}
+    rt.clock.schedule(0.1, lambda: seen.update(hi=hi.rate, lo=lo.rate))
+    rt.clock.run()
+    eff = 100.0 * 0.9                                 # §4.1 discount emerges
+    assert seen["hi"] == pytest.approx(eff * 0.75)
+    assert seen["lo"] == pytest.approx(eff * 0.25)
+    assert rt.ledger.reserved("dev", OUT) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_equal_weights_reduce_to_equal_split_on_compute():
+    """All-equal weights are byte-for-byte the unweighted runtime on a
+    compute resource (mirror of the transfer property)."""
+    qos = QoSPolicy([Tenant(f"t{i}", weight=2.0) for i in range(3)])
+    finals = {}
+    for name, policy in (("plain", None), ("equal", qos)):
+        rt = FabricRuntime(Fabric.of(compute_path("dev", 90.0),
+                                     concurrency_discount=0.1), qos=policy)
+        cs = [rt.compute("dev", 27.0 * (i + 1), tenant=f"t{i}")
+              for i in range(3)]
+        mid = {}
+        rt.clock.schedule(1e-3, lambda cs=cs: mid.update(
+            rates=[c.rate for c in cs]))
+        rt.clock.run()
+        if policy is not None:
+            assert mid["rates"] == pytest.approx([90.0 * 0.9 / 3] * 3)
+        finals[name] = [c.finished_at for c in cs]
+    assert finals["plain"] == finals["equal"]
+
+
+@pytest.mark.parametrize("weights,ops,disc,cancel_idx", [
+    ((1.0, 1.0, 1.0), (30.0, 20.0, 10.0), 0.0, None),
+    ((5.0, 1.0), (100.0, 100.0), 0.125, 0),
+    ((2.0, 3.0, 7.0, 0.5), (10.0, 40.0, 25.0, 5.0), 0.2, 2),
+    ((8.0,), (50.0,), 0.3, None),
+])
+def test_compute_ledger_conserves_sweep(weights, ops, disc, cancel_idx):
+    """Deterministic slice of the conservation property: mid-flight
+    compute rates never exceed the effective roofline, match the ledger,
+    and the ledger drains — also across a mid-flight cancel."""
+    qos = QoSPolicy([Tenant(f"t{i}", weight=w) for i, w in enumerate(weights)])
+    rt = FabricRuntime(Fabric.of(compute_path("dev", 100.0),
+                                 concurrency_discount=disc), qos=qos)
+    cs = [rt.compute("dev", amt, tenant=f"t{i}") for i, amt in enumerate(ops)]
+    probes = []
+    rt.clock.schedule(1e-3, lambda: probes.append(
+        (sum(c.rate for c in cs if not c.done),
+         rt.ledger.reserved("dev", OUT))))
+    if cancel_idx is not None:
+        rt.clock.schedule(2e-3, lambda: rt.cancel(cs[cancel_idx]))
+    rt.clock.run()
+    eff = 100.0 * ((1 - disc) if len(cs) > 1 and disc > 0 else 1.0)
+    rates, reserved = probes[0]
+    assert rates <= eff + 1e-6 and reserved <= eff + 1e-6
+    assert rates == pytest.approx(reserved)
+    assert all(c.done for c in cs)
+    if cancel_idx is not None:
+        assert cs[cancel_idx].canceled
+    assert rt.ledger.reserved("dev", OUT) == pytest.approx(0.0, abs=1e-9)
+    assert rt.ledger.reserved("dev", IN) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_compute_reservations_conserve_property():
+    """Property (hypothesis): random weights/ops/discount, with a random
+    mid-flight cancel, never over-commit the device and always drain the
+    ledger — reserve/cancel/complete/rebalance conserve on every
+    resource."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.floats(0.5, 8.0), st.floats(1.0, 50.0)),
+                    min_size=1, max_size=5),
+           st.floats(0.0, 0.3), st.integers(0, 5))
+    def inner(flows, disc, cancel_at):
+        qos = QoSPolicy([Tenant(f"t{i}", weight=w)
+                         for i, (w, _) in enumerate(flows)])
+        rt = FabricRuntime(Fabric.of(compute_path("dev", 100.0),
+                                     concurrency_discount=disc), qos=qos)
+        cs = [rt.compute("dev", amt, tenant=f"t{i}")
+              for i, (_, amt) in enumerate(flows)]
+        seen = {}
+
+        def probe():
+            seen["rates"] = sum(c.rate for c in cs if not c.done)
+            seen["reserved"] = rt.ledger.reserved("dev", OUT)
+
+        rt.clock.schedule(1e-3, probe)
+        if cancel_at < len(cs):
+            rt.clock.schedule(2e-3, lambda: rt.cancel(cs[cancel_at]))
+        rt.clock.run()
+        eff = 100.0 * (1 - disc if len(flows) > 1 and disc > 0 else 1.0)
+        assert seen["rates"] <= eff + 1e-6
+        assert seen["rates"] == pytest.approx(seen["reserved"])
+        assert all(c.done for c in cs)
+        assert rt.ledger.reserved("dev", OUT) == pytest.approx(0.0, abs=1e-6)
+        assert rt.ledger.reserved("dev", IN) == pytest.approx(0.0, abs=1e-6)
+
+    inner()
+
+
+# ----------------------------------------------------------------------
+# QoS-weighted allocate == converged runtime shares (satellite)
+# ----------------------------------------------------------------------
+
+def test_weighted_allocate_matches_converged_runtime_shares():
+    """The static plan and the live weighted max-min agree: same fabric,
+    same tenants, same discount — same rates."""
+    disc = 0.1
+    qos = QoSPolicy([Tenant("a", weight=3.0), Tenant("b", weight=1.0),
+                     Tenant("c", weight=1.0)])
+    tenants = ("a", "b", "c")
+
+    fab = Fabric.of(Path("link", 100.0), concurrency_discount=disc)
+    alts = [Alternative(t, uses=[Use("link", out=1.0)], tenant=t)
+            for t in tenants]
+    allocs, total = MultipathRouter(fab).allocate(alts, qos=qos)
+    plan = {a.alternative: a.rate for a in allocs}
+    eff = 100.0 * (1 - disc)
+    assert plan["a"] == pytest.approx(eff * 0.6)
+    assert plan["b"] == plan["c"] == pytest.approx(eff * 0.2)
+    assert total == pytest.approx(eff)
+
+    rt = FabricRuntime(Fabric.of(Path("link", 100.0),
+                                 concurrency_discount=disc), qos=qos)
+    ts = {t: rt.transfer("link", 500.0, tenant=t) for t in tenants}
+    seen = {}
+    rt.clock.schedule(1e-3, lambda: seen.update(
+        {k: t.rate for k, t in ts.items()}))
+    rt.clock.run()
+    for t in tenants:
+        assert seen[t] == pytest.approx(plan[t]), t
+
+
+def test_weighted_allocate_compute_cap_water_fills_like_runtime():
+    """A compute-capped heavy alternative's surplus goes to the lighter
+    ones — the same water-filling the runtime applies via max_rate."""
+    qos = QoSPolicy([Tenant("hi", weight=3.0), Tenant("lo", weight=1.0)])
+    fab = Fabric.of(Path("link", 100.0))
+    alts = [Alternative("hi", uses=[Use("link", out=1.0)], tenant="hi",
+                        compute_rate=10.0),
+            Alternative("lo", uses=[Use("link", out=1.0)], tenant="lo")]
+    allocs, total = MultipathRouter(fab).allocate(alts, qos=qos)
+    plan = {a.alternative: a.rate for a in allocs}
+    assert plan["hi"] == pytest.approx(10.0)
+    assert plan["lo"] == pytest.approx(90.0)
+
+    rt = FabricRuntime(Fabric.of(Path("link", 100.0)), qos=qos)
+    hi = rt.transfer("link", 10.0, tenant="hi", max_rate=10.0)
+    lo = rt.transfer("link", 500.0, tenant="lo")
+    seen = {}
+    rt.clock.schedule(1e-3, lambda: seen.update(hi=hi.rate, lo=lo.rate))
+    rt.clock.run()
+    assert seen["hi"] == pytest.approx(plan["hi"])
+    assert seen["lo"] == pytest.approx(plan["lo"])
+
+
+def test_weighted_allocate_respects_demand_and_existing_holders():
+    """Demand caps the aggregate; live ledger holders shrink the budget
+    and trigger the discount exactly as the runtime counts them."""
+    qos = QoSPolicy([Tenant("a", weight=1.0), Tenant("b", weight=1.0)])
+    fab = Fabric.of(Path("link", 100.0), concurrency_discount=0.1)
+    led = fab.ledger()
+    led.reserve("link", out=30.0, flow="external")
+    alts = [Alternative(t, uses=[Use("link", out=1.0)], tenant=t)
+            for t in ("a", "b")]
+    allocs, total = MultipathRouter(fab).allocate(alts, ledger=led, qos=qos)
+    # 3 flows on the path -> discounted 90, minus the external 30
+    assert total == pytest.approx(60.0)
+    assert [a.rate for a in allocs] == pytest.approx([30.0, 30.0])
+    allocs2, total2 = MultipathRouter(fab).allocate(alts, demand=10.0,
+                                                    qos=qos)
+    assert total2 == pytest.approx(10.0)
+    assert all(a.bottleneck == "demand" for a in allocs2)
+    with pytest.raises(FabricError, match="unbounded"):
+        MultipathRouter(fab).allocate(
+            [Alternative("free", uses=[], tenant="a")], qos=qos)
+
+
+# ----------------------------------------------------------------------
+# device rooflines + DCA path type
+# ----------------------------------------------------------------------
+
+def test_device_roofline_and_path_kinds():
+    d = DeviceSpec("x", cores=4, ops_per_core=1e9, mem_bw=2e9)
+    assert d.peak_ops == pytest.approx(4e9)
+    assert d.roofline(1.0) == pytest.approx(2e9)     # memory bound
+    assert d.roofline(10.0) == pytest.approx(4e9)    # compute bound
+    with pytest.raises(ValueError, match="intensity"):
+        d.roofline(0.0)
+    with pytest.raises(ValueError, match="envelope"):
+        DeviceSpec("bad", cores=0, ops_per_core=1e9, mem_bw=1e9)
+    dca = BF2_DCA.path("dca:0")
+    assert dca.kind == DCA and dca.is_compute and not dca.bidirectional
+    assert dca.units == OPS_PER_S
+    arm = BF2_ARM.path("cpu:soc:0")
+    assert arm.is_compute and arm.capacity < HOST_CPU.path("h").capacity
+    assert not Path("wire", 1.0).is_compute
+    assert dca_path("d", 5.0).kind == DCA
+    # the wimpy-SoC premise, in numbers: ARM complex far below the host
+    assert BF2_ARM.roofline(1.0) < 0.3 * HOST_CPU.roofline(1.0)
+
+
+def test_offload_program_pipeline_and_stats():
+    """transfer-in -> compute -> transfer-out runs sequentially on one
+    runtime, leaves a clean ledger, and records the smartnic-idiom
+    stats."""
+    fab = Fabric.of(Path("wire", 100.0), compute_path("dev", 50.0))
+    rt = FabricRuntime(fab)
+    stats = OffloadStats()
+    prog = OffloadProgram(rt, "filt", stats=stats)
+    proc = prog.launch(compute="dev", ops=100.0, in_path="wire",
+                       in_bytes=200.0, out_path="wire", out_bytes=50.0)
+    rt.clock.run()
+    assert proc.done
+    # 200/100 in + 100/50 compute + 50/100 out, strictly sequential
+    assert proc.result == pytest.approx(2.0 + 2.0 + 0.5)
+    s = stats.get_performance_stats()
+    assert s["programs_run"] == 1 and s["ops_executed"] == pytest.approx(100.0)
+    _clean_ledger(rt)
+
+
+# ----------------------------------------------------------------------
+# checkpoint-compression offload: bit-identical bytes (tentpole)
+# ----------------------------------------------------------------------
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {"w": rng.standard_normal((64, 32)).astype(np.float32),
+            "b": np.arange(17, dtype=np.int32)}
+
+
+def test_soc_compression_bit_identical_bytes(tmp_path):
+    """A checkpoint compressed 'on the SoC' (SoCCompressor) is byte-for-
+    byte the host-compressed checkpoint — placement moves the cycles,
+    the accounting, and nothing else."""
+    stats = OffloadStats()
+    st_host = save_checkpoint(str(tmp_path / "host"), _tree(), step=3,
+                              compress=True,
+                              compressor=host_compressor(stats))
+    st_soc = save_checkpoint(str(tmp_path / "soc"), _tree(), step=3,
+                             compress=True,
+                             compressor=SoCCompressor(stats=stats))
+    assert st_host["stored_bytes"] == st_soc["stored_bytes"]
+    import msgpack
+    man = {}
+    for who in ("host", "soc"):
+        with open(os.path.join(tmp_path, who, "manifest.msgpack"), "rb") as f:
+            man[who] = msgpack.unpackb(f.read())
+    assert man["host"]["sha256"] == man["soc"]["sha256"]
+    assert man["host"]["codec"] == man["soc"]["codec"] != "none"
+    data = "data.npz" + {"zstd": ".zst", "zlib": ".zz"}[man["soc"]["codec"]]
+    with open(os.path.join(tmp_path, "host", data), "rb") as f1, \
+            open(os.path.join(tmp_path, "soc", data), "rb") as f2:
+        assert f1.read() == f2.read()                 # bit-identical
+    # restore from the SoC-compressed copy reproduces the tree exactly
+    restored, step = load_checkpoint(str(tmp_path / "soc"), _tree())
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _tree()["w"])
+    # only the SoC run is credited as offloaded
+    s = stats.get_performance_stats()
+    assert s["compression_operations_offloaded"] == 1
+    assert s["cpu_cycles_saved"] > 0
+    assert s["compression_bytes_in"] == 2 * man["soc"]["raw_bytes"]
+
+
+# ----------------------------------------------------------------------
+# the crossover emerges from scheduling (tentpole acceptance)
+# ----------------------------------------------------------------------
+
+def _ckpt_cluster(mode, host_load=None, nodes=2):
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e6, ckpt_bytes=8e9,
+                          ckpt_path=mode, tokens_per_step=1000)
+    c = TrainCluster(nodes, tm, ckpt_every=2, host_load=host_load)
+    summary = c.run(2)
+    return c, summary["sim_seconds"]
+
+
+def test_compression_crossover_emerges_from_scheduling():
+    """Idle host side: the fat host cores + fast wire win. Loaded host
+    side: the DCA codec + SoC wire win. Nothing in the cluster hardcodes
+    the flip — it comes out of the shared ledger."""
+    _, idle_host = _ckpt_cluster(HOST_COMPRESS)
+    _, idle_soc = _ckpt_cluster(SOC_COMPRESS)
+    assert idle_host < 0.9 * idle_soc, (idle_host, idle_soc)
+    load = {"node0": 0.7, "node1": 0.7}
+    _, busy_host = _ckpt_cluster(HOST_COMPRESS, load)
+    soc_cluster, busy_soc = _ckpt_cluster(SOC_COMPRESS, load)
+    assert busy_soc < 0.9 * busy_host, (busy_soc, busy_host)
+    # offload accounting in the smartnic idiom: one save per node ran
+    # off-host, crediting the codec ops as host cycles saved
+    s = soc_cluster.offload.get_performance_stats()
+    assert s["compression_operations_offloaded"] == 2
+    assert s["cpu_cycles_saved"] == pytest.approx(2 * 8e9)
+    assert s["compression_ratio"] == pytest.approx(0.5)
+    _clean_ledger(soc_cluster.runtime,
+                  external_flows={"hostload:node0", "hostload:node1"})
+
+
+def test_host_compress_runs_on_host_and_credits_nothing():
+    c, _ = _ckpt_cluster(HOST_COMPRESS)
+    s = c.offload.get_performance_stats()
+    assert s["compression_operations_offloaded"] == 0
+    assert s["cpu_cycles_saved"] == 0.0
+    assert s["compression_bytes_in"] == 2 * 8e9    # both saves recorded
+    _clean_ledger(c.runtime)
+
+
+def test_compress_staging_is_pause_safe():
+    """Admission-control pause mid-codec: the Compute is canceled (its
+    reservation returns), the remaining ops are re-issued after resume,
+    and the save still completes — deferral, never loss."""
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=0.0, ckpt_bytes=8e9,
+                          ckpt_path=SOC_COMPRESS)
+    c = TrainCluster(1, tm, ckpt_every=1)
+    rt = c.runtime
+    rt.clock.schedule(0.3, c.pause_transfers)      # mid-DCA-compute
+    rt.clock.schedule(0.6, c.resume_transfers)
+    summary = c.run(1)
+    assert summary["steps"] == 1
+    kinds = [e["event"] for e in c.events]
+    assert "transfers_paused" in kinds and "transfers_resumed" in kinds
+    # the 0.3s pause is visible in the timeline (work deferred, not lost)
+    assert summary["sim_seconds"] >= 0.3 + 0.8     # pause + full codec time
+    assert c.offload.counters["compression_operations_offloaded"] == 1
+    _clean_ledger(rt)
+
+
+def test_compress_mode_requires_compute_tier_fabric():
+    fab = train_fabric(1, compute_tier=False)
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=0.0, ckpt_bytes=1e9,
+                          ckpt_path=SOC_COMPRESS)
+    with pytest.raises(FabricError, match="compute paths"):
+        TrainCluster(1, tm, fabric=fab)
+    with pytest.raises(ValueError, match="ckpt_ratio"):
+        ClusterTimeModel(compute_s=0.01, grad_bytes=0.0, ckpt_ratio=0.0)
+
+
+# ----------------------------------------------------------------------
+# compute-aware staging choice (satellite)
+# ----------------------------------------------------------------------
+
+def test_choose_staging_considers_compress_then_stage():
+    """StagingOption candidates are costed per raw byte over wire AND
+    compute; compress-then-stage wins exactly when both wires are
+    mostly spoken for but the accelerator is idle."""
+    fab = train_fabric(1)
+    led = fab.ledger()
+    cands = [StagingOption("host", "host:0"),
+             StagingOption("soc", "soc:0"),
+             StagingOption("soc-compress", "soc:0", wire_scale=0.5,
+                           compute="dca:0", ops_scale=1.0)]
+    # no ledger: first candidate (static preference)
+    assert CheckpointManager.choose_staging(cands) == "host"
+    # idle fabric: the fat host wire wins
+    assert CheckpointManager.choose_staging(cands, ledger=led) == "host"
+    # both wires 80% spoken for, DCA idle: compress-then-stage wins
+    led.reserve("host:0", out=0.8 * fab["host:0"].capacity, flow="load-h")
+    led.reserve("soc:0", out=0.8 * fab["soc:0"].capacity, flow="load-s")
+    assert CheckpointManager.choose_staging(cands, ledger=led) \
+        == "soc-compress"
+    # plain strings still behave exactly as before (max available)
+    assert CheckpointManager.choose_staging(["host:0", "soc:0"],
+                                            ledger=led) == "host:0"
+
+
+def test_auto_staging_picks_soc_compress_under_dual_wire_load():
+    """ckpt_path='auto' on a compute-tier fabric reaches for the DCA
+    when the host wire is saturated and the SoC wire is loaded enough
+    that halving the staged bytes pays for the codec — visible in the
+    offload accounting."""
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=0.0, ckpt_bytes=4e9,
+                          ckpt_path="auto")
+    c = TrainCluster(1, tm, ckpt_every=1)
+    led = c.runtime.ledger
+    led.reserve("host:0", out=0.95 * c.fabric["host:0"].capacity, flow="xh")
+    led.reserve("soc:0", out=0.6 * c.fabric["soc:0"].capacity, flow="xs")
+    c.run(1)
+    assert c.offload.counters["compression_operations_offloaded"] == 1
+    _clean_ledger(c.runtime, external_flows={"xh", "xs"})
+
+
+def test_auto_staging_still_matches_best_raw_choice_idle_and_loaded():
+    """The compute-tier candidates must not regress the §6.1 auto
+    behavior: in the idle and host-loaded regimes the raw host/soc
+    choice is still the cheapest and auto still matches it."""
+    def step_time(mode, load):
+        tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e6, ckpt_bytes=8e9,
+                              ckpt_path=mode)
+        return TrainCluster(1, tm, ckpt_every=2,
+                            host_load=load).run(4)["sim_seconds"]
+
+    for load in (None, {"node0": 0.6}):
+        auto = step_time("auto", load)
+        best = min(step_time("soc", load), step_time("host", load))
+        assert auto == pytest.approx(best, rel=1e-9), (load, auto, best)
+
+
+# ----------------------------------------------------------------------
+# DrTM-KV filter offload (tentpole workload 2)
+# ----------------------------------------------------------------------
+
+def _kv():
+    return DisaggKV(KVStoreParams(n_keys=2000, soc_cache_keys=100), seed=1)
+
+
+def test_kv_filter_results_bit_identical_across_placement():
+    kv = _kv()
+    keys = kv.zipf_keys(400, seed=3)
+    predicate = lambda vals: vals[:, 0] < 64          # ~25% selectivity
+    soc = kv.filtered_scan(keys, predicate, where=SOC_FILTER)
+    host = kv.filtered_scan(keys, predicate, where=HOST_FILTER)
+    np.testing.assert_array_equal(soc.keys, host.keys)
+    np.testing.assert_array_equal(soc.values, host.values)
+    assert soc.scanned == host.scanned == 400
+    assert soc.matched == host.matched == len(soc.keys) > 0
+    # every returned value really satisfies the predicate
+    assert bool(np.all(predicate(soc.values)))
+
+
+def test_kv_filter_placement_flips_under_host_load():
+    """Idle, the host path's 100 Mop/s beats the SoC's wimpy cores;
+    with a serve tenant holding the host path the SoC placement keeps
+    its rate and wins — same decision shape as decode placement."""
+    kv = _kv()
+    fab = kv.fabric()
+    idle = plan_filter_placement(fab, selectivity=0.1, costs=kv.c)
+    assert idle.location == HOST_FILTER
+    assert idle.host_rate > idle.soc_rate
+    led = fab.ledger()
+    led.reserve("host_read", out=0.9 * fab["host_read"].capacity,
+                flow="serve")
+    busy = plan_filter_placement(fab, selectivity=0.1, costs=kv.c,
+                                 ledger=led)
+    assert busy.location == SOC_FILTER
+    assert busy.soc_rate > busy.host_rate
+    # the modeled scan seconds agree with the flip
+    keys = kv.zipf_keys(200, seed=5)
+    predicate = lambda vals: vals[:, 0] < 32
+    f = KVFilter(kv)
+    assert f.scan(keys, predicate, where=SOC_FILTER, ledger=led).seconds \
+        < f.scan(keys, predicate, where=HOST_FILTER, ledger=led).seconds
+
+
+def test_kv_filter_stats_and_alternatives():
+    kv = _kv()
+    stats = OffloadStats()
+    f = KVFilter(kv, stats=stats)
+    keys = kv.zipf_keys(300, seed=9)
+    scan = f.scan(keys, lambda v: v[:, 0] < 16, where=SOC_FILTER)
+    s = stats.get_performance_stats()
+    assert s["packets_total"] == 300
+    assert s["packets_offloaded"] == 300 - scan.matched
+    assert s["offload_hit_rate"] == pytest.approx(1 - scan.matched / 300)
+    assert s["cpu_cycles_saved"] >= 300
+    alts = kv_filter_alternatives(kv.c, selectivity=0.2)
+    for alt in alts.values():
+        kv.fabric().validate(alt)
+    with pytest.raises(ValueError, match="selectivity"):
+        kv_filter_alternatives(kv.c, selectivity=1.5)
+    with pytest.raises(ValueError, match="where"):
+        f.scan(keys, lambda v: v[:, 0] < 16, where="fpga")
+
+
+# ----------------------------------------------------------------------
+# tenancy integration
+# ----------------------------------------------------------------------
+
+def test_serve_train_offload_policy():
+    pol = QoSPolicy.serve_train_offload()
+    assert pol.weight(SERVE) == 16.0
+    assert pol.weight(TRAIN) == 1.0
+    assert pol.weight(OFFLOAD) == 2.0
+    assert pol.tenant_class(OFFLOAD) == THROUGHPUT
+
+
+def test_offload_program_shares_device_with_qos_weights():
+    """An offload program and a train-tenant Compute on one device split
+    the roofline by policy weight."""
+    qos = QoSPolicy.serve_train_offload(offload_weight=3.0, train_weight=1.0)
+    rt = FabricRuntime(Fabric.of(compute_path("dev", 100.0)), qos=qos)
+    prog = OffloadProgram(rt, "codec")          # tenant=OFFLOAD by default
+    prog.launch(compute="dev", ops=400.0)
+    tr = rt.compute("dev", 400.0, tenant=TRAIN)
+    seen = {}
+    rt.clock.schedule(1e-3, lambda: seen.update(train=tr.rate))
+    rt.clock.run()
+    assert seen["train"] == pytest.approx(25.0)     # 1/(3+1) of the device
+    _clean_ledger(rt)

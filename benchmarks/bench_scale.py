@@ -1,0 +1,72 @@
+"""Million-user serving (scale/): trace-driven fleet + autoscaling.
+
+Three row groups:
+- the headline: static vs TTFT-autoscaled fleet under the 10x diurnal
+  burst trace (premium-tenant attainment collapses vs holds);
+- attainment vs offered load for the autoscaled fleet (sweeping the
+  trace's base rate);
+- raw runtime capacity: executed events/s of the event loop driving
+  O(1k) concurrent transfers on one shared ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.fabric import Fabric, Path
+from repro.core.runtime import FabricRuntime
+from repro.scale import headline_fleet, headline_specs, ServeFleet
+
+from benchmarks.common import row
+
+
+def _fleet_row(name: str, rep, tenant: str = "premium") -> None:
+    tr = rep.tenants[tenant]
+    row(name, tr.metrics["p99_ttft"] * 1e6,
+        f"attainment={tr.attainment:.1%} peak_replicas={tr.peak_replicas} "
+        f"requests={tr.metrics['requests']:.0f}")
+
+
+def main() -> None:
+    print("# SLO tenant fleet under the 10x diurnal burst trace")
+    static = headline_fleet().run(autoscale=False, max_sim_seconds=2000.0)
+    _fleet_row("scale/attainment_static", static)
+    auto = headline_fleet().run(autoscale=True, max_sim_seconds=2000.0)
+    _fleet_row("scale/attainment_autoscaled", auto)
+    row("scale/standard_autoscaled",
+        auto.tenants["standard"].metrics["p99_ttft"] * 1e6,
+        f"attainment={auto.tenants['standard'].attainment:.1%}")
+
+    print("# attainment vs offered load (autoscaled, no burst baseline 2/s)")
+    for mult in (0.5, 1.0, 2.0):
+        specs = headline_specs(duration=60.0)
+        scaled = [dataclasses.replace(
+            s, trace=dataclasses.replace(
+                s.trace, base_rate=s.trace.base_rate * mult))
+            for s in specs]
+        rep = ServeFleet(scaled, host_bw=1400.0).run(
+            autoscale=True, max_sim_seconds=2000.0)
+        tr = rep.tenants["premium"]
+        row(f"scale/offered_{mult:g}x", tr.metrics["p99_ttft"] * 1e6,
+            f"attainment={tr.attainment:.1%} "
+            f"offered={scaled[0].trace.mean_rate:.1f}req_s")
+
+    print("# event-loop capacity at O(1k) concurrent transfers")
+    fab = Fabric.of(*[Path(f"p{i}", 100.0) for i in range(8)],
+                    concurrency_discount=0.1)
+    rt = FabricRuntime(fab)
+    rng = np.random.default_rng(0)
+    ts = [rt.transfer(f"p{int(rng.integers(8))}",
+                      float(rng.uniform(1.0, 30.0)),
+                      flow=f"f{i % 13}", tenant=f"t{i % 5}")
+          for i in range(1500)]
+    ev0 = rt.clock.processed
+    t0 = time.monotonic()
+    rt.clock.run()
+    wall = time.monotonic() - t0
+    assert all(t.done for t in ts)
+    events = rt.clock.processed - ev0
+    row("scale/runtime_events_per_s", wall * 1e6,
+        f"events_per_s={events / wall:,.0f} events={events}")

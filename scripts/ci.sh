@@ -1,23 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
-# plus the runtime/train/colocation/kvserve/offload benchmark sections
-# with schema-validated JSON output (BENCH_6.json — the PR-6 perf
-# trajectory record).
-#   scripts/ci.sh            # tests + runtime,train,colocation,kvserve,offload
+# plus the runtime/train/colocation/kvserve/offload/scale benchmark
+# sections with schema-validated JSON output (BENCH_7.json — the PR-7
+# perf trajectory record), and a trajectory check that the PR-6
+# headline rows recorded in the committed BENCH_6.json have not
+# regressed past tolerance.
+#   scripts/ci.sh            # tests + runtime,...,offload,scale
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_6.json \
-    --only runtime,train,colocation,kvserve,offload
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_7.json \
+    --only runtime,train,colocation,kvserve,offload,scale
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_6.json") as f:
+with open("BENCH_7.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -52,12 +54,58 @@ else:
                      "offload/ckpt_host_compress_busy",
                      "offload/cycles_saved",
                      "offload/kvfilter_host_busy",
-                     "offload/kvfilter_soc_busy"):
+                     "offload/kvfilter_soc_busy",
+                     "scale/attainment_static",
+                     "scale/attainment_autoscaled",
+                     "scale/runtime_events_per_s"):
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_6.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_6.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_7.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_7.json OK ({len(doc['rows'])} rows)")
+EOF
+
+# trajectory check: PR-6 headline rows must stay within tolerance of
+# the committed BENCH_6.json, and the offload winner must still be
+# soc-compress.  (These are deterministic simulated timings, so 25% is
+# generous — it only catches genuine model changes, not jitter.)
+PYTHONPATH=src python - <<'EOF'
+import json, sys
+
+TOL = 0.25
+HEADLINES = ("runtime/overlapped_pair", "colocation/serve_managed_p99",
+             "offload/ckpt_soc_compress_busy", "offload/ckpt_host_compress_busy")
+
+def by_name(path):
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)["rows"]}
+
+old, new = by_name("BENCH_6.json"), by_name("BENCH_7.json")
+problems = []
+for name in HEADLINES:
+    if name not in old:
+        problems.append(f"baseline BENCH_6.json missing {name!r}")
+        continue
+    if name not in new:
+        problems.append(f"BENCH_7.json missing {name!r}")
+        continue
+    o, n = old[name]["us"], new[name]["us"]
+    drift = abs(n - o) / o
+    status = "FAIL" if drift > TOL else "ok"
+    print(f"  {name}: {o:,.1f}us -> {n:,.1f}us ({drift:+.1%}) {status}")
+    if drift > TOL:
+        problems.append(f"{name} drifted {drift:.1%} (>{TOL:.0%}): "
+                        f"{o:,.1f}us -> {n:,.1f}us")
+soc = new.get("offload/ckpt_soc_compress_busy", {}).get("us")
+host = new.get("offload/ckpt_host_compress_busy", {}).get("us")
+if soc is not None and host is not None and soc >= host:
+    problems.append(f"offload winner flipped: soc-compress {soc:,.1f}us "
+                    f">= host-compress {host:,.1f}us")
+if problems:
+    sys.exit("BENCH_6 -> BENCH_7 trajectory check failed:\n  "
+             + "\n  ".join(problems))
+print("trajectory check OK (PR-6 headline rows within "
+      f"{TOL:.0%}, offload winner still soc-compress)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

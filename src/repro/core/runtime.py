@@ -84,10 +84,16 @@ class Event:
 
 
 class SimClock:
-    """Discrete-event clock. Deterministic: ties break by schedule order."""
+    """Discrete-event clock. Deterministic: ties break by schedule order.
+
+    ``processed`` counts executed (non-canceled) events over the clock's
+    lifetime — the numerator of the simulator's own throughput metric
+    (events/s of *wall* time, benchmarks/bench_scale.py), which is what
+    bounds how much simulated traffic a scale experiment can afford."""
 
     def __init__(self, start: float = 0.0):
         self.now = float(start)
+        self.processed = 0
         self._heap: List[Tuple[float, int, Event]] = []
         self._seq = itertools.count()
 
@@ -126,6 +132,7 @@ class SimClock:
             if ev.canceled:
                 continue
             self.now = time
+            self.processed += 1
             ev.fn(*ev.args)
             if stop is not None and stop():
                 stopped = True
@@ -404,6 +411,8 @@ class FabricRuntime:
         self.qos = qos
         # interference group -> active (capacity-holding) transfers
         self._active: Dict[str, List[Transfer]] = {}
+        # groups with a same-instant rebalance event already queued
+        self._rebalance_pending: set = set()
 
     # -- API ------------------------------------------------------------
     def transfer(self, path: str, amount: float, *, direction: str = OUT,
@@ -515,7 +524,7 @@ class FabricRuntime:
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
-        self._rebalance(group)
+        self._queue_rebalance(group)
 
     def active_transfers(self, path: Optional[str] = None) -> List[Transfer]:
         if path is None:
@@ -570,7 +579,7 @@ class FabricRuntime:
         t._last_update = self.clock.now
         group = self.fabric[t.path].group
         self._active.setdefault(group, []).append(t)
-        self._rebalance(group)
+        self._queue_rebalance(group)
 
     def _complete(self, t: Transfer) -> None:
         if t.done:
@@ -586,6 +595,24 @@ class FabricRuntime:
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
+        self._queue_rebalance(group)
+
+    def _queue_rebalance(self, group: str) -> None:
+        """Coalesce fair-share recomputation to one event per group per
+        simulated instant: a fleet issuing hundreds of same-timestamp
+        transfers (or a decode step sharding across a replica pool)
+        triggers one O(members) rebalance instead of one per mutation.
+        Deferral is invisible in simulated time — the event runs at the
+        same timestamp, after every same-instant join/leave, before the
+        clock advances — and turns the O(n^2) issue/drain cascades at
+        O(1k) concurrent transfers into O(n)."""
+        if group in self._rebalance_pending:
+            return
+        self._rebalance_pending.add(group)
+        self.clock.schedule(0.0, self._run_queued_rebalance, group)
+
+    def _run_queued_rebalance(self, group: str) -> None:
+        self._rebalance_pending.discard(group)
         self._rebalance(group)
 
     def _release(self, t: Transfer) -> None:

@@ -9,6 +9,13 @@ decode cache reads, the decode placement is re-planned per admitted
 request from live ledger occupancy, and the report includes simulated
 p50/p99 time-to-first-token. ``--arrival-spacing`` spaces arrivals out
 (seconds); 0 = one burst.
+
+``--trace steady|burst`` replaces the fixed request list with a seeded
+``repro.scale.TraceSpec`` replay — Poisson arrivals (diurnal + burst
+modulated) with heavy-tailed prompt/decode lengths, the same generator
+the fleet harness uses. Requires ``--staged``; ``--requests``,
+``--prompt-len``, ``--max-new`` and ``--arrival-spacing`` are ignored
+in trace mode (counts and lengths come from the trace).
 """
 from __future__ import annotations
 
@@ -39,7 +46,18 @@ def main(argv=None):
                     help="event-driven pipeline (per-request placement)")
     ap.add_argument("--arrival-spacing", type=float, default=0.0,
                     help="seconds between simulated arrivals (staged)")
+    ap.add_argument("--trace", choices=("steady", "burst"), default=None,
+                    help="replay a seeded repro.scale trace instead of "
+                         "the fixed request list (requires --staged)")
+    ap.add_argument("--trace-rate", type=float, default=2.0,
+                    help="trace base arrival rate, requests/s")
+    ap.add_argument("--trace-duration", type=float, default=20.0,
+                    help="trace length in simulated seconds")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="arrival-generator seed (deterministic replay)")
     args = ap.parse_args(argv)
+    if args.trace and not args.staged:
+        ap.error("--trace requires --staged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -64,17 +82,46 @@ def main(argv=None):
     if args.arrival_spacing and not args.staged:
         print("[serve] note: --arrival-spacing only shapes the simulated "
               "timeline of --staged; the synchronous engine admits a burst")
-    rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
-        shape = ((args.prompt_len, cfg.num_codebooks)
-                 if cfg.num_codebooks > 1 else (args.prompt_len,))
-        prompt = rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32)
-        r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new,
-                    temperature=args.temperature,
-                    arrival=i * args.arrival_spacing if args.staged else 0.0)
-        reqs.append(r)
-        eng.submit(r)
+    if args.trace:
+        import dataclasses
+
+        from repro.scale import ArrivalGenerator, TraceSpec, burst_trace
+        if args.trace == "burst":
+            trace = burst_trace(base_rate=args.trace_rate,
+                                duration=args.trace_duration,
+                                burst_start=args.trace_duration * 0.25,
+                                burst_duration=args.trace_duration * 0.375)
+        else:
+            trace = TraceSpec("steady", args.trace_rate, args.trace_duration,
+                              diurnal_amplitude=0.25,
+                              diurnal_period=args.trace_duration)
+        # clamp sampled lengths to the engine's slot budget
+        trace = dataclasses.replace(trace, prompt=dataclasses.replace(
+            trace.prompt,
+            high=max(trace.prompt.low,
+                     min(trace.prompt.high, args.max_len - trace.decode.high))))
+        reqs = ArrivalGenerator(trace, seed=args.trace_seed,
+                                vocab=cfg.vocab_size).requests()
+        for r in reqs:
+            if cfg.num_codebooks > 1:
+                r.prompt = np.tile(r.prompt[:, None], (1, cfg.num_codebooks))
+            r.temperature = args.temperature
+            eng.submit(r)
+        print(f"[serve] trace {trace.name!r}: {len(reqs)} arrivals over "
+              f"{trace.duration:.0f}s (mean {trace.mean_rate:.1f} req/s, "
+              f"peak {trace.peak_rate:.1f} req/s, seed {args.trace_seed})")
+    else:
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i in range(args.requests):
+            shape = ((args.prompt_len, cfg.num_codebooks)
+                     if cfg.num_codebooks > 1 else (args.prompt_len,))
+            prompt = rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32)
+            r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new,
+                        temperature=args.temperature,
+                        arrival=i * args.arrival_spacing if args.staged else 0.0)
+            reqs.append(r)
+            eng.submit(r)
 
     t0 = time.monotonic()
     eng.run()

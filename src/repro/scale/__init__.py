@@ -1,0 +1,21 @@
+"""Million-user serving at simulation scale (PR 7).
+
+Three pieces on top of the serve/tenancy stack: trace-driven open-loop
+arrival generation (``arrivals``), an SLO tenant fleet sharing one
+FabricRuntime (``fleet``), and TTFT-attainment-driven decode
+autoscaling (``autoscale``).
+"""
+from repro.scale.arrivals import (ArrivalGenerator, Burst, LengthSpec,
+                                  TraceSpec, burst_trace)
+from repro.scale.autoscale import (AutoscaleConfig, Autoscaler, ReplicaPool,
+                                   ttft_attainment)
+from repro.scale.fleet import (FleetReport, FleetTenantSpec, ServeFleet,
+                               TenantReport, fleet_fabric, headline_fleet,
+                               headline_specs, replica_paths_of)
+
+__all__ = [
+    "ArrivalGenerator", "Burst", "LengthSpec", "TraceSpec", "burst_trace",
+    "AutoscaleConfig", "Autoscaler", "ReplicaPool", "ttft_attainment",
+    "FleetReport", "FleetTenantSpec", "ServeFleet", "TenantReport",
+    "fleet_fabric", "headline_fleet", "headline_specs", "replica_paths_of",
+]

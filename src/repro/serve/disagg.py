@@ -132,7 +132,8 @@ class PlacementPlan:
 def plan_decode_placement(fabric: Fabric, *, hit_mass: float = 0.7,
                           costs: Optional[PathCosts] = None,
                           reads_per_index: float = 1.0,
-                          ledger=None) -> PlacementPlan:
+                          ledger=None, occupancy=None,
+                          tenant: Optional[str] = None) -> PlacementPlan:
     """Choose where the decode cache lives by routing the §5.2
     alternatives over `fabric`: SoC cache placement (A5 hits + A4
     misses, blended at `hit_mass`) vs the best cache-less alternative
@@ -145,7 +146,19 @@ def plan_decode_placement(fabric: Fabric, *, hit_mass: float = 0.7,
     current holders count toward the §4.1 discount and their
     reservations shrink every path budget — so the staged engine's
     AdmitStage can re-plan per admitted request and flip to the host
-    path once the SoC-side budgets are eaten."""
+    path once the SoC-side budgets are eaten.
+
+    ``occupancy`` (the ``InterferenceReport.occupancy`` attribution,
+    ``path -> tenant -> fraction``) makes the plan *tenant-aware*
+    without a live ledger: the other tenants' measured shares become
+    external reservations, while ``tenant``'s own traffic is excluded —
+    a tenant should not flee a path it is itself the load on. Ignored
+    when an explicit ``ledger`` is given."""
+    if ledger is None and occupancy is not None:
+        # lazy import: tenancy builds on serve, not the other way round
+        from repro.tenancy.colocation import occupancy_ledger
+        ledger = occupancy_ledger(
+            fabric, occupancy, exclude=(tenant,) if tenant is not None else ())
     alts = kv_alternatives(costs if costs is not None else PathCosts(),
                            reads_per_index)
     router = MultipathRouter(fabric)

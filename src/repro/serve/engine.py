@@ -91,39 +91,64 @@ class ServeTimeModel:
 
 
 class _EngineCore:
-    """Model compute + slot bookkeeping shared by both engines."""
+    """Model compute + slot bookkeeping shared by both engines.
+
+    ``compute`` selects the token source: ``"jax"`` (default) runs the
+    real model; ``"sim"`` replaces prefill/decode with a deterministic
+    per-request hash stream (``_sim_token``) and needs no ``cfg``/
+    ``params`` at all. The slot model, queues, timestamps and fabric
+    transfers are identical either way — sim mode is what makes
+    hundreds-of-requests fleet traces affordable while keeping
+    bit-identity assertions meaningful (the token at position ``i`` of
+    request ``rid`` is a pure function of ``(rid, i)``, so any
+    scheduling change that reorders or drops work changes the bytes)."""
 
     MIN_BUCKET = 8
 
-    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
-                 max_len: int = 256, impl: str = "auto",
+    def __init__(self, cfg: Optional[ModelConfig], params: Any, *,
+                 slots: int = 4, max_len: int = 256, impl: str = "auto",
                  cache_dtype=jnp.float32, seed: int = 0,
-                 bucket_prefill: bool = True):
+                 bucket_prefill: bool = True, compute: str = "jax"):
+        if compute not in ("jax", "sim"):
+            raise ValueError(f"compute must be 'jax' or 'sim', got {compute!r}")
+        self.compute = compute
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.impl = slots, max_len, impl
         self.tenant: Optional[str] = None   # QoS tag on fabric transfers
         #: (completion sim-time, ttft) samples — admission control input
         self.ttft_log: List[Tuple[float, float]] = []
-        self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
-        self.pos = jnp.zeros((slots,), jnp.int32)       # next write index
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []   # retired, not yet drained by run()
+        self.stats: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_steps": 0,
+            "prefill_compilations": 0, "prefill_padded_tokens": 0}
+        self._compiled_buckets: set = set()
+        if compute == "sim":
+            self.cache = None
+            self.pos = np.zeros((slots,), np.int64)
+            self.bucket_prefill = False
+            return
+        if cfg is None:
+            raise ValueError("compute='jax' needs a ModelConfig")
+        self.cache, _ = M.init_cache(cfg, slots, max_len, cache_dtype)
+        self.pos = jnp.zeros((slots,), jnp.int32)       # next write index
         self.key = jax.random.PRNGKey(seed)
         # bucketing needs causal attention's inert pad tail; SSM state
         # runs through every position, so those configs prefill exact.
         self._attn_only = all(slot_kind(cfg, s)["kind"] == "attn"
                               for s in range(layer_period(cfg)))
         self.bucket_prefill = bucket_prefill and self._attn_only
-        self._compiled_buckets: set = set()
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, impl=impl))
         self._prefill = jax.jit(
             lambda p, t, n: M.prefill(cfg, p, t, max_len, impl=impl,
                                       cache_dtype=cache_dtype, length=n))
-        self.stats: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_steps": 0,
-            "prefill_compilations": 0, "prefill_padded_tokens": 0}
+
+    @staticmethod
+    def _sim_token(rid: int, i: int) -> int:
+        """Deterministic token ``i`` of request ``rid`` in sim mode."""
+        return (rid * 1315423911 + i * 2654435761) & 0x7FFF
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -140,6 +165,11 @@ class _EngineCore:
     def _prefill_request(self, req: Request) -> Tuple[Any, int]:
         """Real prefill compute for one request (bucketed): appends the
         first output token and returns (cache_row, next_pos)."""
+        if self.compute == "sim":
+            n = len(np.asarray(req.prompt))
+            req.out_tokens.append(self._sim_token(req.rid, 0))
+            self.stats["prefill_tokens"] += n
+            return None, n
         prompt = np.asarray(req.prompt)
         n = prompt.shape[0]
         bucket = self._bucket_len(n)
@@ -164,6 +194,10 @@ class _EngineCore:
         self.cache = jax.tree.map(put, self.cache, row_cache)
 
     def _activate(self, slot: int, req: Request, cache1, npos: int):
+        if self.compute == "sim":
+            self.pos[slot] = npos
+            self.active[slot] = req
+            return
         self._splice_cache(slot, cache1)
         self.pos = self.pos.at[slot].set(npos)
         self.active[slot] = req
@@ -175,8 +209,14 @@ class _EngineCore:
         return jax.random.categorical(sub, logits / temperature, axis=-1)
 
     # ------------------------------------------------------------------
-    def _decode_compute(self, act: List[int]) -> jax.Array:
+    def _decode_compute(self, act: List[int]) -> Optional[jax.Array]:
         """One real decode step for the active slots; returns logits."""
+        if self.compute == "sim":
+            for s in range(self.slots):
+                if self.active[s] is not None:
+                    self.pos[s] += 1
+            self.stats["decode_steps"] += 1
+            return None
         cb = self.cfg.num_codebooks
         last = np.zeros((self.slots,) + ((cb,) if cb > 1 else ()), np.int32)
         for s in act:
@@ -190,8 +230,21 @@ class _EngineCore:
         self.stats["decode_steps"] += 1
         return logits
 
-    def _finish_decode(self, act: List[int], logits: jax.Array) -> List[Request]:
+    def _finish_decode(self, act: List[int], logits) -> List[Request]:
         """Append sampled tokens, retire finished requests."""
+        if self.compute == "sim":
+            retired = []
+            for s in act:
+                req = self.active[s]
+                req.out_tokens.append(
+                    self._sim_token(req.rid, len(req.out_tokens)))
+                if len(req.out_tokens) >= req.max_new_tokens or \
+                        int(self.pos[s]) >= self.max_len - 1:
+                    req.done = True
+                    self.active[s] = None
+                    self.finished.append(req)
+                    retired.append(req)
+            return retired
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         retired: List[Request] = []
         for s in act:
@@ -343,7 +396,8 @@ class PrefillStage:
     def process(self):
         eng = self.engine
         while True:
-            while eng.queue and self.inflight < self.max_inflight:
+            while eng.queue and not eng.intake_paused \
+                    and self.inflight < self.max_inflight:
                 req = eng.queue.pop(0)
                 self.inflight += 1
                 eng.runtime.process(self._one(req), name=f"prefill:{req.rid}")
@@ -394,10 +448,70 @@ class AdmitStage:
             yield eng.admittable
 
 
+class DecodeReplica:
+    """One decode-path worker in the engine's replica pool: a runtime
+    Process that claims per-slot cache-read shards from
+    ``engine._decode_items`` and moves them *concurrently* over its own
+    path (continuous batching: each active slot's read is an
+    independent flow, so a decode-heavy engine contends on a shared
+    path in proportion to its live batch, and replicas absorb whole
+    batches in parallel). The base replica (``fallback=True``) rides
+    the time model's default decode path and only serves while no extra
+    replicas exist — scaling out *moves* the decode traffic off the
+    shared path instead of adding to it, which is how spawning replicas
+    frees prefill bandwidth (and TTFT) on the path the tenants contend
+    on. Retirement cancels the in-flight shard transfers; the
+    completion callback re-queues each unmoved remainder — work is
+    deferred to the survivors, never lost, so token streams are
+    bit-identical across scale events."""
+
+    def __init__(self, engine: "StagedServeEngine", path: str,
+                 fallback: bool = False):
+        self.engine = engine
+        self.path = path
+        self.fallback = fallback
+        self.retired = False
+        self.proc = None
+        self.inflight: List = []
+
+    def serve(self):
+        eng = self.engine
+        while True:
+            if eng._decode_items and not (self.fallback and eng._extras()):
+                # claim my fair share of the queued shards (ceil split
+                # over the serving replicas); a straggler shard left by
+                # rounding re-fires the signal and drains at the same
+                # simulated instant
+                live = len(eng._extras()) or 1
+                take = min(-(-len(eng._decode_items) // live),
+                           len(eng._decode_items))
+                for _ in range(take):
+                    amt = eng._decode_items.pop(0)
+                    # accounting lives in the completion callback, not
+                    # after a yield: a retired replica's generator is
+                    # closed, but its callbacks still run
+                    t = eng.runtime.transfer(
+                        self.path, amt, flow=f"decode:{self.path}",
+                        tenant=eng.tenant, on_complete=self._shard_done)
+                    self.inflight.append(t)
+                if eng._decode_items:
+                    eng.decode_work.fire()
+            yield eng.decode_work
+
+    def _shard_done(self, t) -> None:
+        if t in self.inflight:
+            self.inflight.remove(t)
+        self.engine._on_decode_shard_done(t)
+
+
 class DecodeStage:
     """Advances every active slot one token per iteration; the step's
     batched cache read is charged as transfers on the decode path(s),
-    overlapping any in-flight prefill transfers."""
+    overlapping any in-flight prefill transfers. With the engine's
+    replica pool enabled, default-path reads are sharded across the
+    live replicas (continuous batching: the batch membership at each
+    step is whatever slots are active — replicas only change *where*
+    the bytes move) while explicitly-placed reads keep their paths."""
 
     def __init__(self, engine: "StagedServeEngine"):
         self.engine = engine
@@ -418,13 +532,24 @@ class DecodeStage:
                 groups[path] = groups.get(path, 0) + 1
             # start every placement group's cache read at once; the step
             # completes when the slowest path drains
-            transfers = [
-                eng.runtime.transfer(path, groups[path] * tm.decode_units_per_slot,
-                                     flow=f"decode:{path}", tenant=eng.tenant)
-                for path in sorted(groups)
-                if groups[path] * tm.decode_units_per_slot > 0]
+            transfers = []
+            pool_amt, pool_slots = 0.0, 0
+            for path in sorted(groups):
+                amt = groups[path] * tm.decode_units_per_slot
+                if amt <= 0:
+                    continue
+                if eng._decode_pool and path == tm.decode_path:
+                    pool_amt += amt
+                    pool_slots += groups[path]
+                else:
+                    transfers.append(eng.runtime.transfer(
+                        path, amt, flow=f"decode:{path}", tenant=eng.tenant))
+            if pool_amt > 0:
+                eng._dispatch_decode_pool(pool_amt, pool_slots)
             for tr in transfers:
                 yield tr
+            while eng._decode_open_amt > 1e-9:
+                yield eng.decode_done
             retired = eng._finish_decode(act, logits)
             for req in retired:
                 req.finish_time = eng.clock.now
@@ -436,7 +561,8 @@ class DecodeStage:
 class StagedServeEngine(_EngineCore):
     """The event-driven serving pipeline (see module docstring)."""
 
-    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+    def __init__(self, cfg: Optional[ModelConfig], params: Any, *,
+                 slots: int = 4,
                  max_len: int = 256, impl: str = "auto",
                  cache_dtype=jnp.float32, seed: int = 0,
                  fabric: Optional[Fabric] = None,
@@ -446,10 +572,12 @@ class StagedServeEngine(_EngineCore):
                  plan_placement: bool = False,
                  cache_hit_mass: float = 0.7, placement_costs=None,
                  max_inflight_prefills: int = 2,
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 compute: str = "jax",
+                 decode_pool: bool = False):
         super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
                          cache_dtype=cache_dtype, seed=seed,
-                         bucket_prefill=bucket_prefill)
+                         bucket_prefill=bucket_prefill, compute=compute)
         self.tenant = tenant
         if runtime is None:
             if fabric is None:
@@ -471,12 +599,109 @@ class StagedServeEngine(_EngineCore):
         self.decode_stage = DecodeStage(self)
         self._n_open = 0
         self._started = False
+        self.intake_paused = False       # admission arbitration gate
+        # -- decode replica pool (autoscaling target) ------------------
+        self._decode_pool = decode_pool
+        self._replicas: List[DecodeReplica] = []
+        self._decode_items: List[float] = []   # sharded cache-read amounts
+        self._decode_open_amt = 0.0            # dispatched, not yet moved
+        self.decode_work = Signal(self.clock)  # shards queued
+        self.decode_done = Signal(self.clock)  # all dispatched work moved
+        self.scale_events: List[dict] = []
+        if decode_pool:
+            self.add_decode_replica(self.tm.decode_path, fallback=True)
 
     def _plan_placement(self):
         from repro.serve.disagg import plan_decode_placement
         return plan_decode_placement(
             self.runtime.fabric, hit_mass=self.cache_hit_mass,
             costs=self.placement_costs, ledger=self.runtime.ledger)
+
+    # -- decode replica pool -------------------------------------------
+    def _extras(self) -> List[DecodeReplica]:
+        return [r for r in self._replicas if not r.fallback and not r.retired]
+
+    @property
+    def n_decode_replicas(self) -> int:
+        """Extra (non-fallback) decode replicas currently serving."""
+        return len(self._extras())
+
+    def add_decode_replica(self, path: Optional[str] = None, *,
+                           fallback: bool = False) -> DecodeReplica:
+        """Scale out: spawn a decode worker on ``path`` (default: the
+        time model's decode path) as a runtime Process."""
+        if not self._decode_pool:
+            raise ValueError("engine was built without decode_pool=True")
+        path = path if path is not None else self.tm.decode_path
+        if path not in self.runtime.fabric:
+            raise ValueError(f"unknown decode path {path!r}")
+        rep = DecodeReplica(self, path, fallback=fallback)
+        rep.proc = self.runtime.process(rep.serve(),
+                                        name=f"decode-replica:{path}")
+        self._replicas.append(rep)
+        if not fallback:
+            self.scale_events.append({
+                "t": self.clock.now, "event": "scale_out", "path": path,
+                "replicas": self.n_decode_replicas})
+            self.decode_work.fire()    # queued shards may now move here
+        return rep
+
+    def retire_decode_replica(self) -> Optional[DecodeReplica]:
+        """Scale in: kill the newest extra replica. Its in-flight shard
+        transfers cancel (reservation back to the ledger) and each
+        unmoved remainder is re-queued for the survivors. The fallback
+        replica is never retired — the pool cannot scale below the base
+        capacity."""
+        extras = self._extras()
+        if not extras:
+            return None
+        rep = extras[-1]
+        rep.retired = True
+        self._replicas.remove(rep)
+        rep.proc.kill()
+        for t in list(rep.inflight):
+            if not t.done:
+                self.runtime.cancel(t)
+        self.scale_events.append({
+            "t": self.clock.now, "event": "scale_in", "path": rep.path,
+            "replicas": self.n_decode_replicas})
+        # the fallback may need to pick re-queued work back up
+        self.decode_work.fire()
+        return rep
+
+    def _dispatch_decode_pool(self, amount: float, shards: int = 1) -> None:
+        """Queue one decode step's default-path cache read as per-slot
+        shards; the live replicas (extras if any exist, else the
+        fallback) claim and move them concurrently."""
+        n = max(int(shards), 1)
+        share = amount / n
+        self._decode_items.extend([share] * n)
+        self._decode_open_amt += amount
+        self.decode_work.fire()
+
+    def _on_decode_shard_done(self, t) -> None:
+        if t.canceled and t.remaining > 1e-9:
+            # a retired replica's shard: defer the remainder
+            self._decode_items.append(t.remaining)
+            self._decode_open_amt -= t.amount - t.remaining
+            self.decode_work.fire()
+        else:
+            self._decode_open_amt -= t.amount
+        if self._decode_open_amt <= 1e-9 and not self._decode_items:
+            self._decode_open_amt = 0.0
+            self.decode_done.fire()
+
+    # -- admission arbitration gate ------------------------------------
+    def pause_intake(self) -> None:
+        """Defer this tenant's prefill dispatch (already-inflight work
+        keeps running) — the serve-tenant analog of
+        ``TrainCluster.pause_transfers`` for K-tenant arbitration."""
+        self.intake_paused = True
+
+    def resume_intake(self) -> None:
+        if self.intake_paused:
+            self.intake_paused = False
+            self.arrived.fire()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -486,6 +711,11 @@ class StagedServeEngine(_EngineCore):
 
     def _on_arrival(self, req: Request):
         self.queue.append(req)
+        # open-loop traffic: the decode loop drains and exits whenever
+        # the engine goes momentarily idle — respawn it for the new wave
+        if self._started and self._decode_proc.done:
+            self._decode_proc = self.runtime.process(
+                self.decode_stage.process(), name="DecodeStage")
         self.arrived.fire()
 
     def _start(self):

@@ -1,17 +1,20 @@
 """Multi-tenant colocation: QoS-weighted fabric sharing, the serve+train
 interference harness, and SLO-driven admission control (paper §6)."""
 from repro.tenancy.admission import (AdmissionConfig, AdmissionController,
-                                     percentile)
+                                     AdmittedTenant,
+                                     FleetAdmissionController, percentile)
 from repro.tenancy.colocation import (Colocation, InterferenceReport,
                                       colocation_fabric,
-                                      colocation_time_model, serve_metrics,
+                                      colocation_time_model,
+                                      occupancy_ledger, serve_metrics,
                                       solo_serve, solo_train)
 from repro.tenancy.qos import (LATENCY, SERVE, THROUGHPUT, TRAIN, QoSPolicy,
                                Tenant)
 
 __all__ = [
-    "AdmissionConfig", "AdmissionController", "Colocation",
-    "InterferenceReport", "LATENCY", "QoSPolicy", "SERVE", "THROUGHPUT",
-    "TRAIN", "Tenant", "colocation_fabric", "colocation_time_model",
-    "percentile", "serve_metrics", "solo_serve", "solo_train",
+    "AdmissionConfig", "AdmissionController", "AdmittedTenant", "Colocation",
+    "FleetAdmissionController", "InterferenceReport", "LATENCY", "QoSPolicy",
+    "SERVE", "THROUGHPUT", "TRAIN", "Tenant", "colocation_fabric",
+    "colocation_time_model", "occupancy_ledger", "percentile",
+    "serve_metrics", "solo_serve", "solo_train",
 ]

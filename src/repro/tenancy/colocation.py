@@ -96,6 +96,37 @@ class InterferenceReport:
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def placement_ledger(self, fabric: Fabric, *,
+                         tenant: Optional[str] = None):
+        """A fresh ledger over ``fabric`` seeded with the *other*
+        tenants' measured occupancy — the input that makes
+        ``plan_decode_placement`` tenant-aware: the planner sees the
+        co-runners' held capacity as external reservations without
+        mistaking ``tenant``'s own traffic for contention."""
+        exclude = (tenant,) if tenant is not None else ()
+        return occupancy_ledger(fabric, self.occupancy, exclude=exclude)
+
+
+def occupancy_ledger(fabric: Fabric, occupancy: Dict[str, Dict[str, float]],
+                     *, exclude: Sequence[str] = ()):
+    """Seed ``fabric.ledger()`` with per-path outbound reservations from
+    a measured occupancy attribution (``path -> tenant -> fraction``,
+    the ``InterferenceReport.occupancy`` shape), skipping the tenants in
+    ``exclude``. Fractions are clamped to the path's capacity and
+    reserved non-strict (a sampled attribution can momentarily exceed
+    1.0 across tenants on a discounted path)."""
+    ledger = fabric.ledger()
+    for path, per_tenant in occupancy.items():
+        if path not in fabric:
+            continue
+        frac = sum(f for t, f in per_tenant.items() if t not in exclude)
+        if frac <= 0:
+            continue
+        cap = fabric[path].capacity
+        ledger.reserve(path, out=min(frac, 1.0) * cap,
+                       flow="occupancy", strict=False)
+    return ledger
+
 
 def serve_metrics(requests: Sequence[Request], elapsed: float) -> Dict[str, float]:
     """p50/p99 TTFT + decode throughput for a served request set."""

@@ -40,10 +40,14 @@ OFFLOAD = "offload"
 @dataclass(frozen=True)
 class Tenant:
     """One workload sharing the fabric: a name (the tag on its
-    transfers), a class, and its fair-share weight."""
+    transfers), a class, its fair-share weight, and an admission
+    ``priority`` — higher-priority latency tenants are protected first
+    when K tenants contend (tenancy/admission.FleetAdmissionController);
+    weights shape *rates*, priorities order *deferral*."""
     name: str
     tenant_class: str = THROUGHPUT
     weight: float = 1.0
+    priority: int = 0
 
     def __post_init__(self):
         if self.tenant_class not in _CLASSES:
@@ -119,3 +123,11 @@ class QoSPolicy:
         they share."""
         return cls.serve_train(serve_weight, train_weight).add(
             Tenant(OFFLOAD, THROUGHPUT, offload_weight))
+
+    @classmethod
+    def fleet(cls, tenants: Iterable[Tenant]) -> "QoSPolicy":
+        """A serving-fleet policy from explicit per-tenant specs (the
+        scale/ ServeFleet builds one from its FleetTenantSpecs): weights
+        shape each tenant's fair share on the paths it contends on,
+        priorities feed the K-tenant admission arbitration."""
+        return cls(tenants)

@@ -129,6 +129,13 @@ class ClusterTimeModel:
     #                                  fixed here so the simulation does
     #                                  not depend on which codec wheel
     #                                  happens to be installed
+    chunk_bytes: Optional[float] = None   # split tenant transfers into
+    #                                  chunks of at most this size (the
+    #                                  simulate_replication pipeline idea
+    #                                  on the step path): an admission
+    #                                  pause then takes effect at the
+    #                                  next chunk boundary without
+    #                                  cancel/re-issue (drain mode)
 
     def __post_init__(self):
         if self.ckpt_path not in _CKPT_MODES:
@@ -140,6 +147,9 @@ class ClusterTimeModel:
         if self.ckpt_codec_ops < 0:
             raise ValueError(f"ckpt_codec_ops must be >= 0, "
                              f"got {self.ckpt_codec_ops}")
+        if self.chunk_bytes is not None and not self.chunk_bytes > 0:
+            raise ValueError(f"chunk_bytes must be > 0, "
+                             f"got {self.chunk_bytes}")
 
     @classmethod
     def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
@@ -314,18 +324,27 @@ class TrainCluster:
             cands, ledger=self.runtime.ledger, direction=OUT)
 
     # -- admission-control throttling ------------------------------------
-    def pause_transfers(self) -> None:
+    def pause_transfers(self, cancel: bool = True) -> None:
         """Defer the train tenant's fabric traffic: cancel every
         in-flight transfer (the reservations go straight back to the
         ledger) and hold new ones until ``resume_transfers``. Node
         processes park on the resume signal and re-issue the canceled
-        remainders — progress is deferred, never lost."""
+        remainders — progress is deferred, never lost.
+
+        ``cancel=False`` is drain mode: in-flight work finishes and the
+        pause takes effect when each node reaches its next transfer —
+        with a chunked time model (``ClusterTimeModel.chunk_bytes``)
+        that is at most one chunk away, so the pause is still prompt
+        but without any cancel/re-issue churn."""
         if self._paused:
             return
         self._paused = True
         self._resume = self.runtime.signal()
         self.events.append({"t": self.runtime.clock.now,
-                            "event": "transfers_paused", "step": self._step})
+                            "event": "transfers_paused", "step": self._step,
+                            "mode": "cancel" if cancel else "drain"})
+        if not cancel:
+            return
         for n in self.nodes:
             for t in n.inflight:
                 if not t.done:
@@ -348,18 +367,23 @@ class TrainCluster:
         """Move ``amount`` over ``path`` respecting throttle pauses: a
         transfer the admission controller cancels is re-issued with its
         remaining amount after resume (cancel + re-issue is the pause
-        mechanism — the ledger conserves across every transition)."""
+        mechanism — the ledger conserves across every transition).
+
+        With ``chunk_bytes`` set, the amount moves as a pipeline of
+        chunks, so a drain-mode pause (``pause_transfers(cancel=False)``)
+        takes effect at the next chunk boundary — preemptible transfers
+        without cancel/re-issue."""
+        chunk = self.tm.chunk_bytes
         remaining = amount
         while remaining > 1e-9:
             while self._paused:
                 yield self._resume
-            t = self.runtime.transfer(path, remaining, direction=direction,
+            issue = remaining if chunk is None else min(remaining, chunk)
+            t = self.runtime.transfer(path, issue, direction=direction,
                                       flow=flow, tenant=self.tenant)
             node.inflight.append(t)
             yield t
-            if not t.canceled:
-                return
-            remaining = t.remaining
+            remaining -= issue - t.remaining if t.canceled else issue
 
     def _tenant_compute(self, node: ClusterNode, resource: str, ops: float,
                         flow: str):

@@ -1,0 +1,113 @@
+"""Fast event core: executed events/s at O(1k)-O(10k) concurrent
+transfers, incremental vs global rebalancing, and the multi-pod fabric.
+
+Three row groups:
+- the sweep: n concurrent transfers (1k -> 10k) on the bench_scale
+  fleet-scenario shape, with the path count growing alongside the
+  population (a bigger fleet has more nodes and therefore more paths;
+  ~125 transfers/path, the 1k point's density). The headline property
+  is the *curve*: events/s must not collapse as n grows 10x, because
+  per-(path,direction) bucket rebalancing makes per-event cost track
+  bucket size, not total population. (Piling 10k transfers onto a
+  fixed 8 paths is a different regime: every completion then
+  legitimately reshapes ~1.2k fair shares, and no scheduler avoids
+  that work.);
+- the oracle check: the same schedule under rebalance="global"
+  (settle-everything, the pre-rework semantics) vs the default
+  incremental mode — identical simulated end time, with the speedup in
+  the derived column;
+- multi-pod: simulated tokens/s of a 4x8-pod cluster syncing gradients
+  over the shared dcn:pod trunk, raw vs int8-compressed (train/pods.py)
+  at thin and fat trunk bandwidths — the compressed-wins crossover in
+  one table.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.fabric import Fabric, Path
+from repro.core.runtime import FabricRuntime
+from repro.train.cluster import ClusterTimeModel
+from repro.train.pods import pod_cluster
+
+from benchmarks.common import row
+
+SWEEP = (1000, 2500, 5000, 10000)
+DENSITY = 125  # transfers per path, the 1k fleet point's density
+
+
+def _fabric(paths: int) -> Fabric:
+    return Fabric.of(*[Path(f"p{i}", 100.0) for i in range(paths)],
+                     concurrency_discount=0.1)
+
+
+def _run(n: int, paths: int, mode: str = "incremental"):
+    """Issue n transfers (bench_scale's fleet-scenario shape, scaled)
+    and drain the event loop; returns (wall_s, events, sim_end_time)."""
+    rt = FabricRuntime(_fabric(paths), rebalance=mode)
+    rng = np.random.default_rng(0)
+    ts = [rt.transfer(f"p{int(rng.integers(paths))}",
+                      float(rng.uniform(1.0, 30.0)),
+                      flow=f"f{i % 13}", tenant=f"t{i % 5}")
+          for i in range(n)]
+    ev0 = rt.clock.processed
+    t0 = time.monotonic()
+    rt.clock.run()
+    wall = time.monotonic() - t0
+    assert all(t.done for t in ts)
+    return wall, rt.clock.processed - ev0, rt.clock.now
+
+
+def sweep_part() -> None:
+    """events/s vs concurrent-transfer population (non-collapsing)."""
+    for n in SWEEP:
+        paths = max(8, n // DENSITY)
+        wall, events, _ = _run(n, paths)
+        row(f"simcore/transfers_{n}", wall * 1e6,
+            f"events_per_s={events / wall:,.0f} events={events} "
+            f"paths={paths} wall_s={wall:.3f}")
+
+
+def oracle_part() -> None:
+    """Incremental vs global rebalancing on one schedule: identical
+    simulated timeline, incremental faster."""
+    n = 2500
+    paths = n // DENSITY
+    wi, ei, end_i = _run(n, paths, "incremental")
+    wg, eg, end_g = _run(n, paths, "global")
+    assert end_i == end_g, (end_i, end_g)
+    assert ei == eg, (ei, eg)
+    row("simcore/incremental_vs_global", wi * 1e6,
+        f"speedup={wg / wi:.2f}x global_wall_s={wg:.3f} "
+        f"sim_end={end_i:.6f} identical=True")
+
+
+def multipod_part() -> None:
+    """4 pods x 8 nodes over the shared trunk: the pod_sync tradeoff."""
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e9,
+                          tokens_per_step=4096 * 16)
+    for label, bw in (("thin", 25e9), ("fat", 400e9)):
+        tks = {}
+        for sync in ("auto", "compressed"):
+            c = pod_cluster(4, 8, tm, sync=sync, trunk_bw=bw)
+            tks[sync] = c.run(6)["tokens_per_s"]
+        best = max(tks, key=tks.get)
+        row(f"simcore/multipod_trunk_{label}", 1e12 / tks["auto"],
+            f"raw_tokens_per_s={tks['auto']:,.0f} "
+            f"compressed_tokens_per_s={tks['compressed']:,.0f} "
+            f"winner={best}")
+
+
+def main() -> None:
+    print("# events/s sweep, 1k -> 10k concurrent transfers")
+    sweep_part()
+    print("# incremental vs global rebalancing (same schedule)")
+    oracle_part()
+    print("# multi-pod trunk: raw vs compressed pod_sync")
+    multipod_part()
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,8 @@ from benchmarks import (bench_bidirectional, bench_bucketing,
                         bench_colocation, bench_concurrent,
                         bench_granularity, bench_kernels, bench_kvserve,
                         bench_offload, bench_paths, bench_replication,
-                        bench_runtime, bench_scale, bench_skew, bench_train,
-                        roofline)
+                        bench_runtime, bench_scale, bench_simcore,
+                        bench_skew, bench_train, roofline)
 from benchmarks import common
 
 SECTIONS = [
@@ -30,6 +30,7 @@ SECTIONS = [
     ("offload (SoC compute tier, LineFS §5.1 / DrTM-KV §5.2)",
      bench_offload.main),
     ("scale (million-user serving)", bench_scale.main),
+    ("simcore (fast event core + multi-pod)", bench_simcore.main),
     ("replication (Fig 13/15, LineFS §5.1)", bench_replication.main),
     ("kvserve (Fig 17/18, DrTM-KV §5.2)", bench_kvserve.main),
     ("kernels", bench_kernels.main),

@@ -1,25 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
-# plus the runtime/train/colocation/kvserve/offload/scale benchmark
-# sections with schema-validated JSON output (BENCH_7.json — the PR-7
-# perf trajectory record), and a trajectory check that the PR-6
-# headline rows recorded in the committed BENCH_6.json have not
-# regressed past tolerance.
-#   scripts/ci.sh            # tests + runtime,...,offload,scale
+# plus the runtime/train/colocation/kvserve/offload/scale/simcore
+# benchmark sections with schema-validated JSON output (BENCH_8.json —
+# the PR-8 perf trajectory record), a trajectory check that the PR-7
+# headline rows recorded in the committed BENCH_7.json have not
+# regressed past tolerance, and a simulator-speed floor: the event
+# core must stay >= BENCH_7's 334 events/s on the fleet scenario.
+#   scripts/ci.sh            # tests + runtime,...,offload,scale,simcore
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_7.json \
-    --only runtime,train,colocation,kvserve,offload,scale
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_8.json \
+    --only runtime,train,colocation,kvserve,offload,scale,simcore
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_7.json") as f:
+with open("BENCH_8.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -57,22 +58,31 @@ else:
                      "offload/kvfilter_soc_busy",
                      "scale/attainment_static",
                      "scale/attainment_autoscaled",
-                     "scale/runtime_events_per_s"):
+                     "scale/runtime_events_per_s",
+                     "simcore/transfers_1000",
+                     "simcore/transfers_10000",
+                     "simcore/incremental_vs_global",
+                     "simcore/multipod_trunk_thin",
+                     "simcore/multipod_trunk_fat"):
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_7.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_7.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_8.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_8.json OK ({len(doc['rows'])} rows)")
 EOF
 
-# trajectory check: PR-6 headline rows must stay within tolerance of
-# the committed BENCH_6.json, and the offload winner must still be
-# soc-compress.  (These are deterministic simulated timings, so 25% is
-# generous — it only catches genuine model changes, not jitter.)
+# trajectory check: PR-7 headline rows must stay within tolerance of
+# the committed BENCH_7.json, the offload winner must still be
+# soc-compress, and the event core must not regress below BENCH_7's
+# 334 events/s floor on the fleet scenario.  (These are deterministic
+# simulated timings, so 25% is generous — it only catches genuine
+# model changes, not jitter.  The events/s floor is wall-clock, set
+# ~10x below the post-rework speed so machine noise can't trip it.)
 PYTHONPATH=src python - <<'EOF'
-import json, sys
+import json, re, sys
 
 TOL = 0.25
+EVENTS_PER_S_FLOOR = 334.0  # BENCH_7's scale/runtime_events_per_s
 HEADLINES = ("runtime/overlapped_pair", "colocation/serve_managed_p99",
              "offload/ckpt_soc_compress_busy", "offload/ckpt_host_compress_busy")
 
@@ -80,14 +90,14 @@ def by_name(path):
     with open(path) as f:
         return {r["name"]: r for r in json.load(f)["rows"]}
 
-old, new = by_name("BENCH_6.json"), by_name("BENCH_7.json")
+old, new = by_name("BENCH_7.json"), by_name("BENCH_8.json")
 problems = []
 for name in HEADLINES:
     if name not in old:
-        problems.append(f"baseline BENCH_6.json missing {name!r}")
+        problems.append(f"baseline BENCH_7.json missing {name!r}")
         continue
     if name not in new:
-        problems.append(f"BENCH_7.json missing {name!r}")
+        problems.append(f"BENCH_8.json missing {name!r}")
         continue
     o, n = old[name]["us"], new[name]["us"]
     drift = abs(n - o) / o
@@ -101,11 +111,25 @@ host = new.get("offload/ckpt_host_compress_busy", {}).get("us")
 if soc is not None and host is not None and soc >= host:
     problems.append(f"offload winner flipped: soc-compress {soc:,.1f}us "
                     f">= host-compress {host:,.1f}us")
+evrow = new.get("scale/runtime_events_per_s", {})
+m = re.search(r"events_per_s=([\d,]+)", evrow.get("derived", ""))
+if m is None:
+    problems.append("scale/runtime_events_per_s has no events_per_s= "
+                    f"in derived: {evrow.get('derived')!r}")
+else:
+    ev_s = float(m.group(1).replace(",", ""))
+    status = "FAIL" if ev_s < EVENTS_PER_S_FLOOR else "ok"
+    print(f"  scale/runtime_events_per_s: {ev_s:,.0f} ev/s "
+          f"(floor {EVENTS_PER_S_FLOOR:,.0f}) {status}")
+    if ev_s < EVENTS_PER_S_FLOOR:
+        problems.append(f"event core regressed: {ev_s:,.0f} events/s "
+                        f"< floor {EVENTS_PER_S_FLOOR:,.0f}")
 if problems:
-    sys.exit("BENCH_6 -> BENCH_7 trajectory check failed:\n  "
+    sys.exit("BENCH_7 -> BENCH_8 trajectory check failed:\n  "
              + "\n  ".join(problems))
-print("trajectory check OK (PR-6 headline rows within "
-      f"{TOL:.0%}, offload winner still soc-compress)")
+print("trajectory check OK (PR-7 headline rows within "
+      f"{TOL:.0%}, offload winner still soc-compress, event core above "
+      f"{EVENTS_PER_S_FLOOR:,.0f} ev/s)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

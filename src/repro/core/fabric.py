@@ -326,6 +326,13 @@ class BudgetLedger:
 
     ``checkpoint()`` / ``restore()`` snapshot the whole ledger, so a
     router can explore an allocation and roll it back.
+
+    Holder accounting is *indexed*: a per-interference-group
+    ``flow -> live (flow, path) entry count`` map is maintained on every
+    reserve/release, so ``holders()`` (and the runtime's discount check)
+    is O(group flows) instead of a scan over every ledger entry — the
+    scan was the dominant cost of rebalancing at O(1k) concurrent
+    transfers.
     """
 
     def __init__(self, fabric: Fabric):
@@ -335,13 +342,55 @@ class BudgetLedger:
             (name, d): 0.0 for name in fabric for d in _DIRS}
         # (flow, path) -> reserved (out, in) — release bookkeeping
         self._by_flow: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        # path -> interference group (cached; lazily extended)
+        self._group_of: Dict[str, str] = {
+            name: fabric[name].group for name in fabric}
+        # group -> flow -> number of live (flow, path) entries: the
+        # holder index. Every _by_flow entry has a positive component
+        # (reserve never creates an all-zero entry; release pops them),
+        # so entry count == holder-ship.
+        self._holders: Dict[str, Dict[str, int]] = {}
+
+    def _group(self, name: str) -> str:
+        g = self._group_of.get(name)
+        if g is None:
+            g = self._group_of[name] = self.fabric[name].group
+        return g
+
+    def _holder_add(self, name: str, flow: str) -> None:
+        g = self._group(name)
+        d = self._holders.setdefault(g, {})
+        d[flow] = d.get(flow, 0) + 1
+
+    def _holder_del(self, name: str, flow: str) -> None:
+        g = self._group(name)
+        d = self._holders.get(g)
+        if d is None:
+            return
+        c = d.get(flow, 0) - 1
+        if c <= 0:
+            d.pop(flow, None)
+            if not d:
+                del self._holders[g]
+        else:
+            d[flow] = c
+
+    def _rebuild_holders(self) -> None:
+        self._holders = {}
+        for (flow, name) in self._by_flow:
+            self._holder_add(name, flow)
 
     # -- holders / discount --------------------------------------------
     def holders(self, name: str) -> Set[str]:
         """Distinct flows active on this path's interference group."""
-        group = self.fabric[name].group
-        return {flow for (flow, pname), (o, i) in self._by_flow.items()
-                if (o > 0 or i > 0) and self.fabric[pname].group == group}
+        return set(self._holders.get(self._group(name), ()))
+
+    def group_holders(self, group: str) -> Dict[str, int]:
+        """The live ``flow -> entry count`` index for one interference
+        group — the O(1)-maintained structure behind ``holders()``; the
+        runtime's discount check reads it directly (counting distinct
+        flows without building a set)."""
+        return self._holders.get(group, {})
 
     def effective_capacity(self, name: str, direction: str,
                            *, joining: Optional[str] = None) -> float:
@@ -389,8 +438,13 @@ class BudgetLedger:
                 return False
         self._reserved[(name, OUT)] += out
         self._reserved[(name, IN)] += in_
-        po, pi = self._by_flow.get((flow, name), (0.0, 0.0))
-        self._by_flow[(flow, name)] = (po + out, pi + in_)
+        fkey = (flow, name)
+        cur = self._by_flow.get(fkey)
+        if cur is None:
+            self._by_flow[fkey] = (out, in_)
+            self._holder_add(name, flow)
+        else:
+            self._by_flow[fkey] = (cur[0] + out, cur[1] + in_)
         return True
 
     def release(self, name: str, *, out: float = 0.0, in_: float = 0.0,
@@ -407,9 +461,42 @@ class BudgetLedger:
         self._reserved[(name, IN)] = max(0.0, self._reserved[(name, IN)] - in_)
         no, ni = max(0.0, po - out), max(0.0, pi - in_)
         if no <= 0.0 and ni <= 0.0:
-            self._by_flow.pop((flow, name), None)
+            if self._by_flow.pop((flow, name), None) is not None:
+                self._holder_del(name, flow)
         else:
             self._by_flow[(flow, name)] = (no, ni)
+
+    def shift(self, name: str, direction: str, deltas: Dict[str, float]) -> None:
+        """Runtime fast path: apply per-flow reservation *deltas* on one
+        (path, direction) without the strict availability scan — the
+        caller (``FabricRuntime``'s rebalancer) constructs fair shares
+        that fit the budget by construction, and has already aggregated
+        one delta per flow. Bookkeeping (``_reserved`` clamping,
+        ``_by_flow`` entry lifecycle, the holder index) matches a
+        reserve()/release() sequence exactly, so conservation
+        invariants and ``holders()`` are unaffected."""
+        key = (name, direction)
+        total = self._reserved[key]
+        out_dir = direction == OUT
+        for flow, d in deltas.items():
+            if d == 0.0:
+                continue
+            total = total + d if d > 0 else max(0.0, total + d)
+            fkey = (flow, name)
+            po, pi = self._by_flow.get(fkey, (0.0, 0.0))
+            if out_dir:
+                po = po + d if d > 0 else max(0.0, po + d)
+            else:
+                pi = pi + d if d > 0 else max(0.0, pi + d)
+            if po <= 0.0 and pi <= 0.0:
+                if self._by_flow.pop(fkey, None) is not None:
+                    self._holder_del(name, flow)
+            elif fkey in self._by_flow:
+                self._by_flow[fkey] = (po, pi)
+            else:
+                self._by_flow[fkey] = (po, pi)
+                self._holder_add(name, flow)
+        self._reserved[key] = total
 
     def release_flow(self, flow: str) -> None:
         """Release everything a flow holds, across all paths."""
@@ -445,6 +532,7 @@ class BudgetLedger:
         reserved, by_flow = token
         self._reserved = dict(reserved)
         self._by_flow = dict(by_flow)
+        self._rebuild_holders()
 
     def reserved(self, name: str, direction: str) -> float:
         return self._reserved[(name, direction)]

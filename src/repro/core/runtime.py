@@ -42,19 +42,35 @@ captures exactly that:
                   a periodic process (heartbeats); ``cancel()`` aborts
                   an in-flight transfer, releasing its reservation.
 
-Rebalancing model: whenever a transfer joins or leaves an interference
-group, every member's progress is settled at its old rate, the group's
-per-direction capacity (discounted iff more than one distinct flow is
-active on the group, counting non-transfer ledger holders) is split
-among the members on each (path, direction) by *weighted* max-min
-fairness, and completion events are rescheduled. Weights come from the
-runtime's QoS policy (any object with ``weight(tenant) -> float``;
-see tenancy/qos.QoSPolicy) applied to each transfer's ``tenant`` tag —
-with no policy, or all weights equal, the split degenerates to the
-equal shares of the untenanted runtime. Path ``latency`` is served as a pure delay
-before the transfer starts occupying capacity. External ledger
-reservations (e.g. a primary functionality's pre-reserved traffic) are
-respected: transfers only share what the ledger has left.
+Rebalancing model: active transfers are indexed per interference group
+into per-(path, direction) *buckets* (insertion-ordered sets with O(1)
+membership). When a transfer joins or leaves, only its own bucket is
+recomputed — the group's per-direction capacity (discounted iff more
+than one distinct flow is active on the group, counting non-transfer
+ledger holders via an O(1)-maintained counter) is split among the
+bucket's members by *weighted* max-min fairness. A member whose rate
+comes out exactly unchanged is left alone: its progress anchor,
+reservation and scheduled completion event all stay — progress is
+settled lazily, only when the rate actually changes, which makes the
+recomputation idempotent and lets untouched buckets keep their state
+bit-identically. If the group's discount flag flips (the holder count
+crosses 1), every bucket of the group is recomputed, since the flip
+changes every bucket's capacity. ``FabricRuntime(rebalance="global")``
+keeps the pre-indexed behavior — recompute all buckets of the group on
+any mutation — as a debug oracle; both modes produce bit-identical
+(time, rate, remaining) traces by construction (asserted by a property
+test in tests/test_simcore.py).
+
+Weights come from the runtime's QoS policy (any object with
+``weight(tenant) -> float``; see tenancy/qos.QoSPolicy) applied to each
+transfer's ``tenant`` tag — with no policy, or all weights equal, the
+split degenerates to the equal shares of the untenanted runtime. Path
+``latency`` is served as a pure delay before the transfer starts
+occupying capacity. External ledger reservations (e.g. a primary
+functionality's pre-reserved traffic) are respected: transfers only
+share what the ledger has left — note that after an *external* ledger
+change (or a QoS weight change), rates are stale until ``rebalance()``
+is called for the affected path, in either mode.
 
 Conservation: every reservation a transfer makes is released when it
 finishes, so after a quiescent run the ledger is back to its external
@@ -69,6 +85,13 @@ from typing import (Any, Callable, Dict, Generator, List, Optional, Tuple)
 
 from repro.core.fabric import (BudgetLedger, Fabric, FabricError, IN, OUT,
                                OPS_PER_S)
+
+#: relative tolerance for "this rebalance did not change your rate":
+#: recomputing an untouched bucket reproduces its shares only up to the
+#: ledger's accumulated float rounding, and an ulp-level delta must not
+#: cancel/reschedule completion events (it would make the global oracle
+#: drift from the incremental mode)
+_RATE_RTOL = 1e-9
 
 
 class Event:
@@ -88,14 +111,27 @@ class SimClock:
 
     ``processed`` counts executed (non-canceled) events over the clock's
     lifetime — the numerator of the simulator's own throughput metric
-    (events/s of *wall* time, benchmarks/bench_scale.py), which is what
-    bounds how much simulated traffic a scale experiment can afford."""
+    (events/s of *wall* time, benchmarks/bench_scale.py and
+    bench_simcore.py), which is what bounds how much simulated traffic a
+    scale experiment can afford.
+
+    Cancellation is lazy (a tombstone flag on the Event; the heap entry
+    stays), so a rebalance-heavy run used to grow the heap without
+    bound. The clock now counts live tombstones and *compacts* — filters
+    the canceled entries out and re-heapifies — once they are both
+    numerous (>= ``COMPACT_MIN``) and the majority of the heap.
+    Compaction preserves (time, seq) order exactly, so it is invisible
+    to the simulation; ``compactions`` counts how often it ran."""
+
+    COMPACT_MIN = 256
 
     def __init__(self, start: float = 0.0):
         self.now = float(start)
         self.processed = 0
+        self.compactions = 0
         self._heap: List[Tuple[float, int, Event]] = []
         self._seq = itertools.count()
+        self._tombstones = 0               # canceled events still heaped
 
     def schedule(self, delay: float, fn: Callable, *args) -> Event:
         """Schedule ``fn(*args)`` ``delay`` simulated seconds from now."""
@@ -109,12 +145,22 @@ class SimClock:
         return ev
 
     def cancel(self, ev: Optional[Event]) -> None:
-        if ev is not None:
+        if ev is not None and not ev.canceled:
             ev.canceled = True
+            self._tombstones += 1
+            if (self._tombstones >= self.COMPACT_MIN
+                    and self._tombstones * 2 >= len(self._heap)):
+                self._compact()
+
+    def _compact(self) -> None:
+        self._heap = [e for e in self._heap if not e[2].canceled]
+        heapq.heapify(self._heap)
+        self._tombstones = 0
+        self.compactions += 1
 
     @property
     def pending(self) -> int:
-        return sum(1 for _, _, e in self._heap if not e.canceled)
+        return len(self._heap) - self._tombstones
 
     def run(self, until: Optional[float] = None,
             stop: Optional[Callable[[], bool]] = None) -> float:
@@ -130,7 +176,12 @@ class SimClock:
                 break
             heapq.heappop(self._heap)
             if ev.canceled:
+                self._tombstones -= 1
                 continue
+            # mark executed so a later cancel() of this event is a no-op
+            # (it is no longer in the heap — it must not count as a
+            # tombstone)
+            ev.canceled = True
             self.now = time
             self.processed += 1
             ev.fn(*ev.args)
@@ -401,18 +452,43 @@ class FabricRuntime:
     proportion to their tenant's weight — a latency-class serve tenant
     can be promised most of a path a throughput-class train tenant is
     also using. Untagged transfers weigh 1.0.
+
+    ``rebalance`` selects the fair-share recomputation strategy:
+    ``"incremental"`` (default) touches only the mutated
+    (path, direction) bucket; ``"global"`` recomputes every bucket of
+    the mutated group on every mutation — the old behavior, kept as a
+    bit-identical debug oracle (see the module docstring).
     """
 
     def __init__(self, fabric: Fabric, *, clock: Optional[SimClock] = None,
-                 ledger: Optional[BudgetLedger] = None, qos=None):
+                 ledger: Optional[BudgetLedger] = None, qos=None,
+                 rebalance: str = "incremental"):
+        if rebalance not in ("incremental", "global"):
+            raise ValueError(
+                f"rebalance must be 'incremental' or 'global', got "
+                f"{rebalance!r}")
         self.fabric = fabric
         self.clock = clock if clock is not None else SimClock()
         self.ledger = ledger if ledger is not None else fabric.ledger()
         self.qos = qos
-        # interference group -> active (capacity-holding) transfers
-        self._active: Dict[str, List[Transfer]] = {}
+        self.rebalance_mode = rebalance
+        # group -> (path, direction) -> insertion-ordered set of active
+        # (capacity-holding) transfers: the bucket index. Dict-as-set
+        # gives O(1) add/remove/contains with deterministic order.
+        self._buckets: Dict[str, Dict[Tuple[str, str],
+                                      Dict[Transfer, None]]] = {}
+        # group -> flow -> active-member count (distinct-flow counter
+        # for the discount check, no set rebuilds)
+        self._member_flows: Dict[str, Dict[str, int]] = {}
+        # group -> discount flag applied at the last rebalance; a flip
+        # dirties every bucket of the group
+        self._discounted: Dict[str, bool] = {}
+        # group -> buckets mutated since the group's queued rebalance
+        self._dirty: Dict[str, set] = {}
         # groups with a same-instant rebalance event already queued
         self._rebalance_pending: set = set()
+        # path -> group cache (lazily extended if the fabric grows)
+        self._group_of: Dict[str, str] = {}
 
     # -- API ------------------------------------------------------------
     def transfer(self, path: str, amount: float, *, direction: str = OUT,
@@ -507,15 +583,17 @@ class FabricRuntime:
         must not hang) and can inspect ``canceled``."""
         if t.done:
             return
-        group = self.fabric[t.path].group
+        group = self._group(t.path)
+        key = (t.path, t.direction)
         now = self.clock.now
-        if t in self._active.get(group, []):
+        members = self._buckets.get(group, {}).get(key)
+        if members is not None and t in members:
             dt = now - t._last_update
             if dt > 0 and t.rate > 0:
                 t.remaining = max(0.0, t.remaining - t.rate * dt)
             t._last_update = now
             self._release(t)
-            self._active[group].remove(t)
+            self._drop_member(group, key, t)
         t.canceled = True
         t.done = True
         t.finished_at = now
@@ -524,13 +602,24 @@ class FabricRuntime:
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
-        self._queue_rebalance(group)
+        self._queue_rebalance(group, key)
 
     def active_transfers(self, path: Optional[str] = None) -> List[Transfer]:
+        """In-flight capacity-holding transfers, straight off the bucket
+        index (no scans): all of them, or those on one ``path`` (its OUT
+        bucket then its IN bucket)."""
         if path is None:
-            return [t for ts in self._active.values() for t in ts]
-        group = self.fabric[path].group
-        return [t for t in self._active.get(group, []) if t.path == path]
+            return [t for buckets in self._buckets.values()
+                    for members in buckets.values() for t in members]
+        buckets = self._buckets.get(self._group(path))
+        if not buckets:
+            return []
+        out: List[Transfer] = []
+        for key in ((path, OUT), (path, IN)):
+            members = buckets.get(key)
+            if members:
+                out.extend(members)
+        return out
 
     def weight_of(self, tenant: Optional[str]) -> float:
         """A tenant's QoS weight under the runtime's policy (1.0 with no
@@ -550,9 +639,12 @@ class FabricRuntime:
         if cap <= 0:
             return {} if by_tenant else 0.0
         held: Dict[Optional[str], float] = {}
-        for t in self.active_transfers(path):
-            if t.direction == direction and t._res > 0:
-                held[t.tenant] = held.get(t.tenant, 0.0) + t._res
+        members = self._buckets.get(self._group(path), {}).get(
+            (path, direction))
+        if members:
+            for t in members:
+                if t._res > 0:
+                    held[t.tenant] = held.get(t.tenant, 0.0) + t._res
         if by_tenant:
             return {k: v / cap for k, v in held.items()}
         return sum(held.values()) / cap
@@ -564,48 +656,82 @@ class FabricRuntime:
         notify the runtime about non-transfer releases, so a transfer
         stalled behind an external reservation stays at rate 0 until
         this is called for its path (or for all groups, with no
-        argument)."""
+        argument). Recomputes every bucket of the group, in either
+        rebalance mode."""
         if path is not None:
-            self._rebalance(self.fabric[path].group)
+            self._rebalance(self._group(path))
         else:
-            for group in list(self._active):
+            for group in list(self._buckets):
                 self._rebalance(group)
 
     # -- mechanics ------------------------------------------------------
+    def _group(self, path: str) -> str:
+        g = self._group_of.get(path)
+        if g is None:
+            g = self._group_of[path] = self.fabric[path].group
+        return g
+
     def _begin(self, t: Transfer) -> None:
         if t.done:          # canceled during the latency phase
             return
-        t.started_at = self.clock.now
-        t._last_update = self.clock.now
-        group = self.fabric[t.path].group
-        self._active.setdefault(group, []).append(t)
-        self._queue_rebalance(group)
+        now = self.clock.now
+        t.started_at = now
+        t._last_update = now
+        group = self._group(t.path)
+        key = (t.path, t.direction)
+        self._buckets.setdefault(group, {}).setdefault(key, {})[t] = None
+        mf = self._member_flows.setdefault(group, {})
+        mf[t.flow] = mf.get(t.flow, 0) + 1
+        self._queue_rebalance(group, key)
 
     def _complete(self, t: Transfer) -> None:
         if t.done:
             return
-        group = self.fabric[t.path].group
+        group = self._group(t.path)
+        key = (t.path, t.direction)
         t.remaining = 0.0
         t.done = True
         t.finished_at = self.clock.now
         self.clock.cancel(t._event)
         t._event = None
         self._release(t)
-        self._active[group].remove(t)
+        self._drop_member(group, key, t)
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
-        self._queue_rebalance(group)
+        self._queue_rebalance(group, key)
 
-    def _queue_rebalance(self, group: str) -> None:
+    def _drop_member(self, group: str, key: Tuple[str, str],
+                     t: Transfer) -> None:
+        """O(1) removal from the bucket index + flow counter. Empty
+        buckets are deleted eagerly so bucket iteration order stays
+        'creation order among currently-populated buckets'."""
+        buckets = self._buckets[group]
+        members = buckets[key]
+        del members[t]
+        if not members:
+            del buckets[key]
+            if not buckets:
+                del self._buckets[group]
+        mf = self._member_flows[group]
+        c = mf[t.flow] - 1
+        if c <= 0:
+            del mf[t.flow]
+            if not mf:
+                del self._member_flows[group]
+        else:
+            mf[t.flow] = c
+
+    def _queue_rebalance(self, group: str, key: Tuple[str, str]) -> None:
         """Coalesce fair-share recomputation to one event per group per
         simulated instant: a fleet issuing hundreds of same-timestamp
         transfers (or a decode step sharding across a replica pool)
-        triggers one O(members) rebalance instead of one per mutation.
-        Deferral is invisible in simulated time — the event runs at the
-        same timestamp, after every same-instant join/leave, before the
-        clock advances — and turns the O(n^2) issue/drain cascades at
-        O(1k) concurrent transfers into O(n)."""
+        triggers one rebalance instead of one per mutation. Deferral is
+        invisible in simulated time — the event runs at the same
+        timestamp, after every same-instant join/leave, before the
+        clock advances. The mutated (path, direction) is recorded so
+        the incremental mode recomputes only the dirty buckets."""
+        self._dirty.setdefault(group, set()).add(key)
         if group in self._rebalance_pending:
             return
         self._rebalance_pending.add(group)
@@ -613,7 +739,11 @@ class FabricRuntime:
 
     def _run_queued_rebalance(self, group: str) -> None:
         self._rebalance_pending.discard(group)
-        self._rebalance(group)
+        dirty = self._dirty.pop(group, None)
+        if self.rebalance_mode == "global":
+            self._rebalance(group)
+        else:
+            self._rebalance(group, only=dirty)
 
     def _release(self, t: Transfer) -> None:
         if t._res > 0:
@@ -621,61 +751,112 @@ class FabricRuntime:
             self.ledger.release(t.path, flow=t.flow, **kw)
             t._res = 0.0
 
-    def _rebalance(self, group: str) -> None:
-        """Settle progress, recompute fair shares, reschedule completions
-        for every active transfer in ``group``."""
-        members = self._active.get(group, [])
-        now = self.clock.now
-        # 1. settle at the old rates, return reservations to the ledger
-        for t in members:
+    def _group_discounted(self, group: str) -> bool:
+        """The §4.1 discount applies iff more than one distinct flow is
+        on the group: active member flows (counted incrementally in
+        ``_member_flows``) united with external ledger holders (the
+        ledger's O(1) holder index — which also contains the members'
+        own reservations, so the union needs no set build). Early-exits
+        after at most two comparisons."""
+        if self.fabric.concurrency_discount <= 0.0:
+            return False
+        mf = self._member_flows.get(group)
+        lh = self.ledger.group_holders(group)
+        if mf:
+            if len(mf) > 1:
+                return True
+            only = next(iter(mf))
+            for f in lh:               # holder flows are distinct keys,
+                if f != only:          # so this breaks within 2 steps
+                    return True
+            return False
+        return len(lh) > 1
+
+    def _rebalance(self, group: str, only: Optional[set] = None) -> None:
+        """Recompute fair shares for the group's buckets — all of them
+        (``only=None``: the public ``rebalance()``, the global mode,
+        and any rebalance where the discount flag flips) or just the
+        dirty ones. Buckets whose inputs did not change recompute to
+        exactly the same rates and are skipped member-by-member, so
+        processing a clean bucket is a no-op — which is what makes the
+        global mode a bit-identical oracle for the incremental mode."""
+        buckets = self._buckets.get(group)
+        if not buckets:
+            return
+        discounted = self._group_discounted(group)
+        if discounted != self._discounted.get(group):
+            only = None                # capacity changed for every bucket
+        self._discounted[group] = discounted
+        for key in list(buckets):
+            if only is not None and key not in only:
+                continue
+            members = buckets.get(key)
+            if members:
+                self._rebalance_bucket(key, members, discounted)
+
+    def _rebalance_bucket(self, key: Tuple[str, str],
+                          members: Dict[Transfer, None],
+                          discounted: bool) -> None:
+        """Weighted max-min fair split of one (path, direction) bucket:
+        each flow's share is proportional to its tenant's QoS weight,
+        and a max_rate-capped flow's surplus is water-filled back to the
+        unsaturated flows. All weights 1 (or no policy) reduces to the
+        equal split. Members whose recomputed rate is unchanged (to a
+        relative epsilon — recomputing a clean bucket can reproduce the
+        same shares only up to the ledger's accumulated rounding, and
+        an ulp-level "change" must not reschedule events) keep their
+        reservation, progress anchor and completion event; changed
+        members are settled at the old rate and rescheduled, and their
+        reservation deltas are applied to the ledger in one per-flow
+        aggregated pass."""
+        path, direction = key
+        fabric = self.fabric
+        clock = self.clock
+        now = clock.now
+        cap = fabric.direction_capacity(path, direction)
+        if discounted:
+            cap *= 1.0 - fabric.concurrency_discount
+        ts = list(members)
+        held = 0.0
+        for t in ts:
+            held += t._res
+        # what the bucket may split: capacity minus everyone else's
+        # reservations (external holders + other buckets never share a
+        # (path, direction) key, so subtracting our own holdings back
+        # out isolates them)
+        avail = max(0.0, cap - (self.ledger.reserved(path, direction) - held))
+        weights = {id(t): self.weight_of(t.tenant) for t in ts}
+        remaining_w = sum(weights.values())
+        # ascending max_rate-per-weight: a flow that saturates its cap
+        # below its proportional share frees surplus for all flows
+        # still unassigned
+        new_rate: Dict[int, float] = {}
+        for t in sorted(ts, key=lambda t: t.max_rate / weights[id(t)]):
+            w = weights[id(t)]
+            share = avail * w / remaining_w if remaining_w > 0 else 0.0
+            r = max(0.0, min(share, t.max_rate))
+            new_rate[id(t)] = r
+            avail -= r
+            remaining_w -= w
+        deltas: Dict[str, float] = {}
+        for t in ts:
+            r = new_rate[id(t)]
+            if abs(r - t.rate) <= _RATE_RTOL * max(1.0, t.rate):
+                continue               # rate-stable: keep event + anchor
             dt = now - t._last_update
             if dt > 0 and t.rate > 0:
                 t.remaining = max(0.0, t.remaining - t.rate * dt)
             t._last_update = now
-            self._release(t)
-        if not members:
-            return
-        # 2. the discount is emergent: it applies iff the final holder
-        # set of the group (transfers + external ledger flows) has more
-        # than one member.
-        external = self.ledger.holders(members[0].path)
-        flows = external | {t.flow for t in members}
-        discounted = (len(flows) > 1
-                      and self.fabric.concurrency_discount > 0.0)
-        buckets: Dict[Tuple[str, str], List[Transfer]] = {}
-        for t in members:
-            buckets.setdefault((t.path, t.direction), []).append(t)
-        # 3. weighted max-min fair split of what the ledger has left, per
-        # (path, direction): each flow's share is proportional to its
-        # tenant's QoS weight, and a max_rate-capped flow's surplus is
-        # water-filled back to the unsaturated flows. All weights 1 (or
-        # no policy) reduces to the equal split.
-        for (path, direction), ts in buckets.items():
-            cap = self.fabric.direction_capacity(path, direction)
-            if discounted:
-                cap *= 1.0 - self.fabric.concurrency_discount
-            avail = max(0.0, cap - self.ledger.reserved(path, direction))
-            weights = {id(t): self.weight_of(t.tenant) for t in ts}
-            remaining_w = sum(weights.values())
-            # ascending max_rate-per-weight: a flow that saturates its
-            # cap below its proportional share frees surplus for all
-            # flows still unassigned
-            for t in sorted(ts, key=lambda t: t.max_rate / weights[id(t)]):
-                w = weights[id(t)]
-                share = avail * w / remaining_w if remaining_w > 0 else 0.0
-                t.rate = max(0.0, min(share, t.max_rate))
-                avail -= t.rate
-                remaining_w -= w
-            for t in ts:
-                if t.rate > 0:
-                    kw = {"out": t.rate} if direction == OUT else {"in_": t.rate}
-                    self.ledger.reserve(path, flow=t.flow, **kw)
-                    t._res = t.rate
-                self.clock.cancel(t._event)
-                if t.remaining <= 1e-12:
-                    t._event = self.clock.schedule(0.0, self._complete, t)
-                elif t.rate > 0:
-                    t._event = self.clock.schedule(t.remaining / t.rate,
-                                                   self._complete, t)
-                else:
-                    t._event = None        # stalled until capacity frees up
+            if r != t._res:
+                deltas[t.flow] = deltas.get(t.flow, 0.0) + (r - t._res)
+                t._res = r
+            t.rate = r
+            clock.cancel(t._event)
+            if t.remaining <= 1e-12:
+                t._event = clock.schedule(0.0, self._complete, t)
+            elif r > 0:
+                t._event = clock.schedule(t.remaining / r, self._complete, t)
+            else:
+                t._event = None        # stalled until capacity frees up
+        if deltas:
+            self.ledger.shift(path, direction, deltas)

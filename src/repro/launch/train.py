@@ -65,29 +65,48 @@ def build(cfg, run: RunConfig, shape: ShapeConfig, mesh, *, impl="auto"):
 
 
 def simulate(cfg, shape, args):
-    """--simulate: dry-run the config on a named fabric (no jax work)."""
+    """--simulate: dry-run the config on a named fabric (no jax work).
+    With ``--pods P``, runs P pods of ``--simulate N`` nodes each —
+    per-pod fabrics merged over the shared ``dcn:pod`` trunk
+    (train/pods.py) — and ``--pod-sync`` selects the inter-pod gradient
+    sync (raw vs int8-compressed trunk ring, the simulated twin of
+    RunConfig.pod_sync)."""
     from repro.train.cluster import (ClusterTimeModel, TRAIN_FABRICS,
                                      TrainCluster)
     if args.fabric not in TRAIN_FABRICS:
         raise SystemExit(f"unknown fabric {args.fabric!r} "
                          f"(have {sorted(TRAIN_FABRICS)})")
-    nodes = args.simulate
 
     def parse_pair(spec, cast):
         name, _, val = spec.partition(":")
         return name, cast(val)
 
+    topo = None
+    fabric = None
+    if args.pods > 1:
+        from repro.train.pods import PodTopology, pod_fabric
+        topo = PodTopology(args.pods, args.simulate, sync=args.pod_sync)
+        fabric = pod_fabric(args.pods, args.simulate,
+                            trunk_bw=args.trunk_bw or None,
+                            pod_fabric_fn=TRAIN_FABRICS[args.fabric])
+        nodes = topo.total_nodes
+    else:
+        nodes = args.simulate
+        fabric = TRAIN_FABRICS[args.fabric](nodes)
+
     tm = ClusterTimeModel.from_config(cfg, shape, nodes=nodes,
                                       ckpt_path=args.ckpt_staging)
     cluster = TrainCluster(
-        nodes, tm, fabric=TRAIN_FABRICS[args.fabric](nodes),
+        nodes, tm, fabric=fabric, topology=topo,
         ckpt_every=args.ckpt_every,
         host_load=dict([parse_pair(args.host_load, float)])
         if args.host_load else None,
         fail_at=parse_pair(args.fail, int) if args.fail else None,
         mitigate_stragglers=True)
     summary = cluster.run(args.steps)
-    print(f"[simulate] fabric={args.fabric} nodes={nodes} "
+    pods_msg = (f" pods={topo.pods}x{topo.nodes_per_pod} "
+                f"pod_sync={topo.sync}" if topo is not None else "")
+    print(f"[simulate] fabric={args.fabric} nodes={nodes}{pods_msg} "
           f"arch={cfg.name} shape={shape.name}")
     print(f"[simulate] compute={tm.compute_s * 1e3:.2f}ms/step "
           f"grad={tm.grad_bytes / 1e9:.2f}GB ckpt={tm.ckpt_bytes / 1e9:.2f}GB "
@@ -99,6 +118,11 @@ def simulate(cfg, shape, args):
           f"{summary['sim_seconds']:.3f}s simulated "
           f"-> {summary.get('tokens_per_s', 0.0):,.0f} tokens/s "
           f"({len(cluster.straggler.stragglers())} stragglers flagged)")
+    if topo is not None:
+        from repro.core.fabric import OUT
+        left = cluster.runtime.ledger.reserved(topo.trunk, OUT)
+        print(f"[simulate] trunk {topo.trunk}: reserved after run = "
+              f"{left:.3g} (0 = every pod-sync reservation conserved)")
     off = cluster.offload.get_performance_stats()
     if off["compression_bytes_in"]:
         print(f"[simulate] offload: "
@@ -128,6 +152,13 @@ def main(argv=None):
     ap.add_argument("--simulate", type=int, default=0, metavar="NODES",
                     help="dry-run NODES simulated trainer nodes on a "
                          "named fabric instead of training")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="--simulate: run PODS pods of NODES nodes each, "
+                         "per-pod fabrics merged over the shared dcn:pod "
+                         "trunk (--pod-sync picks the inter-pod sync)")
+    ap.add_argument("--trunk-bw", type=float, default=0.0,
+                    help="--simulate --pods: inter-pod trunk bytes/s "
+                         "(default pods * DCN_BW_PER_CHIP)")
     ap.add_argument("--fabric", default="v5e",
                     help="named fabric for --simulate "
                          "(v5e | weak-soc | fast-net | linefs)")

@@ -213,11 +213,24 @@ class TrainCluster:
                  host_load: Optional[Dict[str, float]] = None,
                  mitigate_stragglers: bool = False,
                  fail_at: Optional[Tuple[str, int]] = None,
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 topology: Any = None):
         if nodes < 1:
             raise ValueError("cluster needs at least one node")
         self.tm = time_model
-        self.fabric = fabric if fabric is not None else train_fabric(nodes)
+        self.topology = topology         # PodTopology (train/pods.py) or None
+        if topology is not None and topology.total_nodes != nodes:
+            raise ValueError(
+                f"topology is {topology.pods} pods x "
+                f"{topology.nodes_per_pod} nodes = {topology.total_nodes}, "
+                f"but the cluster has {nodes} nodes")
+        if fabric is None:
+            if topology is not None:
+                from repro.train.pods import pod_fabric
+                fabric = pod_fabric(topology.pods, topology.nodes_per_pod)
+            else:
+                fabric = train_fabric(nodes)
+        self.fabric = fabric
         self.runtime = runtime if runtime is not None \
             else FabricRuntime(self.fabric)
         self.step_fn = step_fn
@@ -235,10 +248,10 @@ class TrainCluster:
         self.offload = OffloadStats()    # host-cycles-saved accounting
         if time_model.ckpt_path in _COMPRESS_MODES \
                 and time_model.ckpt_bytes > 0:
-            tmpl = "dca:{}" if time_model.ckpt_path == SOC_COMPRESS \
-                else "cpu:host:{}"
-            missing = [tmpl.format(i) for i in range(nodes)
-                       if tmpl.format(i) not in self.fabric]
+            kind = "dca" if time_model.ckpt_path == SOC_COMPRESS \
+                else "cpu:host"
+            missing = [self._node_path(i, kind) for i in range(nodes)
+                       if self._node_path(i, kind) not in self.fabric]
             if missing:
                 raise FabricError(
                     f"ckpt_path={time_model.ckpt_path!r} needs compute "
@@ -272,8 +285,9 @@ class TrainCluster:
                     "at or above 1 - concurrency_discount the node's own "
                     "traffic would stall forever")
             i = names[name].index
-            cap = self.fabric[f"host:{i}"].capacity
-            self.runtime.ledger.reserve(f"host:{i}", out=frac * cap,
+            hp = self._node_path(i, HOST)
+            cap = self.fabric[hp].capacity
+            self.runtime.ledger.reserve(hp, out=frac * cap,
                                         in_=frac * cap,
                                         flow=f"hostload:{name}")
         self.start_step = 0
@@ -290,9 +304,35 @@ class TrainCluster:
                 (self.params, self.opt_state))
             self.start_step = k + 1
 
+    # -- path naming (pod-aware) -----------------------------------------
+    def _node_path(self, index: int, kind: str) -> str:
+        """The fabric name of global node ``index``'s per-node path of
+        ``kind`` (``host``, ``soc``, ``dca``, ``cpu:host``, ...):
+        ``pod{p}/<kind>:<local>`` under a PodTopology, ``<kind>:<index>``
+        single-pod."""
+        if self.topology is not None:
+            return self.topology.node_path(index, kind)
+        return f"{kind}:{index}"
+
+    def _net_path(self, index: int) -> str:
+        """The ring-allreduce path node ``index`` uses: its pod's
+        ``pod{p}/net`` under a PodTopology, the shared ``net`` else."""
+        if self.topology is not None:
+            return self.topology.net_path(index)
+        return "net"
+
     # -- membership ------------------------------------------------------
     def _live(self) -> List[ClusterNode]:
         return [n for n in self.nodes if n.alive]
+
+    def _ring_peers(self, node: ClusterNode) -> int:
+        """How many live nodes share ``node``'s intra-pod ring (all live
+        nodes single-pod; the pod's live membership under a topology)."""
+        live = self._live()
+        if self.topology is None:
+            return len(live)
+        p = self.topology.pod_of(node.index)
+        return sum(1 for n in live if self.topology.pod_of(n.index) == p)
 
     def _ckpt_step(self, step: int) -> bool:
         return (self.tm.ckpt_bytes > 0 and self.ckpt_every > 0
@@ -307,18 +347,21 @@ class TrainCluster:
         if self.tm.ckpt_path != AUTO:
             return self.tm.ckpt_path
         i, tm = node.index, self.tm
-        cands = [StagingOption(HOST, f"{HOST}:{i}"),
-                 StagingOption(SOC, f"{SOC}:{i}")]
+        host_p, soc_p = self._node_path(i, HOST), self._node_path(i, SOC)
+        dca_p = self._node_path(i, "dca")
+        cpu_p = self._node_path(i, "cpu:host")
+        cands = [StagingOption(HOST, host_p),
+                 StagingOption(SOC, soc_p)]
         ops_per_byte = tm.ckpt_codec_ops
-        if f"dca:{i}" in self.fabric:
-            cands.append(StagingOption(SOC_COMPRESS, f"{SOC}:{i}",
+        if dca_p in self.fabric:
+            cands.append(StagingOption(SOC_COMPRESS, soc_p,
                                        wire_scale=tm.ckpt_ratio,
-                                       compute=f"dca:{i}",
+                                       compute=dca_p,
                                        ops_scale=ops_per_byte))
-        if f"cpu:host:{i}" in self.fabric:
-            cands.append(StagingOption(HOST_COMPRESS, f"{HOST}:{i}",
+        if cpu_p in self.fabric:
+            cands.append(StagingOption(HOST_COMPRESS, host_p,
                                        wire_scale=tm.ckpt_ratio,
-                                       compute=f"cpu:host:{i}",
+                                       compute=cpu_p,
                                        ops_scale=ops_per_byte))
         return CheckpointManager.choose_staging(
             cands, ledger=self.runtime.ledger, direction=OUT)
@@ -413,9 +456,10 @@ class TrainCluster:
         ops = tm.ckpt_codec_ops * tm.ckpt_bytes
         wire_bytes = tm.ckpt_ratio * tm.ckpt_bytes
         if mode == SOC_COMPRESS:
-            compute, wire = f"dca:{i}", f"{SOC}:{i}"
+            compute, wire = self._node_path(i, "dca"), self._node_path(i, SOC)
         else:
-            compute, wire = f"cpu:host:{i}", f"{HOST}:{i}"
+            compute = self._node_path(i, "cpu:host")
+            wire = self._node_path(i, HOST)
         yield from self._tenant_compute(node, compute, ops,
                                         f"ckptcomp:{node.name}")
         yield from self._tenant_xfer(node, wire, wire_bytes, OUT,
@@ -423,6 +467,42 @@ class TrainCluster:
         self.offload.record_compression(
             int(tm.ckpt_bytes), int(wire_bytes), ops=ops,
             offloaded=(mode == SOC_COMPRESS))
+
+    def _pod_sync(self, node: ClusterNode):
+        """Inter-pod gradient sync over the shared DCN trunk (see
+        train/pods.py). Only the pod *leader* — the lowest-indexed live
+        node of the pod, so leadership survives pod-local failures —
+        touches the trunk: a P_live-way ring exchange of the full
+        gradient, ``2 (P-1)/P * grad_bytes * nodes`` wire bytes per
+        leader, all leaders contending on one trunk budget. Under
+        ``sync="compressed"`` the leader first spends the codec ops on
+        its pod-local host socket, then moves ``compress_ratio`` of the
+        bytes — the simulated twin of RunConfig.pod_sync="compressed".
+        Non-leaders skip straight to the global barrier, which is what
+        makes the trunk time part of every node's step. Pause-safe via
+        _tenant_compute/_tenant_xfer like all tenant traffic."""
+        topo = self.topology
+        live = self._live()
+        p = topo.pod_of(node.index)
+        pod_live = [n.index for n in live if topo.pod_of(n.index) == p]
+        if not pod_live or node.index != min(pod_live):
+            return
+        live_pods = len({topo.pod_of(n.index) for n in live})
+        if live_pods < 2:
+            return
+        g_full = self.tm.grad_bytes * len(self.nodes)
+        wire = 2.0 * (live_pods - 1) / live_pods * g_full
+        if wire <= 0:
+            return
+        if topo.sync == "compressed":
+            ops = topo.codec_ops_per_byte * g_full
+            if ops > 0:
+                yield from self._tenant_compute(
+                    node, topo.node_path(node.index, "cpu:host"), ops,
+                    f"podcodec:{node.name}")
+            wire *= topo.compress_ratio
+        yield from self._tenant_xfer(node, topo.trunk, wire, OUT,
+                                     f"podsync:{node.name}")
 
     # -- the per-node step loop -----------------------------------------
     def _node_proc(self, node: ClusterNode):
@@ -445,26 +525,30 @@ class TrainCluster:
                 ck_mode = self._staging_mode(node)
                 if ck_mode not in _COMPRESS_MODES:
                     # raw staging early-starts and overlaps the step
-                    ck = rt.transfer(f"{ck_mode}:{node.index}",
+                    ck = rt.transfer(self._node_path(node.index, ck_mode),
                                      tm.ckpt_bytes, direction=OUT,
                                      flow=f"ckpt:{node.name}",
                                      tenant=self.tenant)
                     node.inflight.append(ck)
             yield tm.compute_s * node.compute_scale * node.share_scale
             if tm.grad_bytes > 0:
+                host_p = self._node_path(node.index, HOST)
                 # sample external host-direction occupancy *before* our
                 # own gradient flow joins the path (detector input)
-                self.straggler.observe_ledger(
-                    node.name, rt.ledger, f"host:{node.index}")
-                yield from self._tenant_xfer(node, f"host:{node.index}",
+                self.straggler.observe_ledger(node.name, rt.ledger, host_p)
+                yield from self._tenant_xfer(node, host_p,
                                              tm.grad_bytes, OUT,
                                              f"grad:{node.name}")
-                live = max(len(self._live()), 1)
+                live = max(self._ring_peers(node), 1)
                 ring = 2.0 * (live - 1) / live * tm.grad_bytes
                 if ring > 0:
-                    yield from self._tenant_xfer(node, "net", ring, OUT,
+                    yield from self._tenant_xfer(node,
+                                                 self._net_path(node.index),
+                                                 ring, OUT,
                                                  f"ring:{node.name}")
-                yield from self._tenant_xfer(node, f"host:{node.index}",
+                if self.topology is not None:
+                    yield from self._pod_sync(node)
+                yield from self._tenant_xfer(node, host_p,
                                              tm.grad_bytes, IN,
                                              f"grad:{node.name}")
             if ck is not None:
@@ -481,9 +565,9 @@ class TrainCluster:
                 if mode in _COMPRESS_MODES:
                     yield from self._ckpt_offload(node, mode)
                 else:
-                    yield from self._tenant_xfer(node, f"{mode}:{node.index}",
-                                                 tm.ckpt_bytes, OUT,
-                                                 f"ckpt:{node.name}")
+                    yield from self._tenant_xfer(
+                        node, self._node_path(node.index, mode),
+                        tm.ckpt_bytes, OUT, f"ckpt:{node.name}")
             self.straggler.observe(node.name, rt.clock.now - t0)
             yield self._barrier.arrive()
 

@@ -1,0 +1,168 @@
+"""Multi-pod hierarchical fabrics (train/pods.py): merged per-pod
+fabrics over the shared DCN trunk, the compressed-vs-raw pod_sync
+crossover, pod-local fault tolerance, and the launcher path."""
+import jax
+import pytest
+
+from repro.core.fabric import Fabric, FabricError, OUT, merge_fabrics
+from repro.train.cluster import ClusterTimeModel, TrainCluster
+from repro.train.pods import (PodTopology, pod_cluster, pod_fabric,
+                              trunk_path, TRUNK)
+
+
+# ----------------------------------------------------------------------
+# topology + fabric composition
+# ----------------------------------------------------------------------
+
+def test_pod_topology_maps_nodes_and_paths():
+    topo = PodTopology(3, 4)
+    assert topo.total_nodes == 12
+    assert topo.pod_of(0) == 0 and topo.pod_of(11) == 2
+    assert topo.local_of(9) == 1
+    assert topo.node_path(9, "host") == "pod2/host:1"
+    assert topo.node_path(5, "cpu:host") == "pod1/cpu:host:1"
+    assert topo.net_path(7) == "pod1/net"
+    assert topo.trunk == TRUNK
+
+
+def test_pod_topology_validates():
+    with pytest.raises(ValueError):
+        PodTopology(0, 4)
+    with pytest.raises(ValueError):
+        PodTopology(2, 2, sync="bogus")
+    with pytest.raises(ValueError):
+        PodTopology(2, 2, compress_ratio=0.0)
+
+
+def test_pod_fabric_namespaces_pods_and_shares_one_trunk():
+    fab = pod_fabric(3, 2)
+    for p in range(3):
+        assert f"pod{p}/host:0" in fab
+        assert f"pod{p}/soc:1" in fab
+        assert f"pod{p}/net" in fab
+    assert "host:0" not in fab          # nothing leaks un-namespaced
+    assert TRUNK in fab                 # one shared trunk, not three
+    assert len([n for n in fab if n == TRUNK]) == 1
+
+
+def test_conflicting_trunk_capacities_are_a_merge_error():
+    a = Fabric.of(trunk_path(25e9))
+    b = Fabric.of(trunk_path(50e9))
+    with pytest.raises(FabricError):
+        merge_fabrics(a, b)
+    # agreeing definitions fold silently into one budget
+    merged = merge_fabrics(a, Fabric.of(trunk_path(25e9)))
+    assert TRUNK in merged
+
+
+def test_cluster_rejects_mismatched_topology():
+    tm = ClusterTimeModel(compute_s=0.01, grad_bytes=0.0)
+    with pytest.raises(ValueError):
+        TrainCluster(3, tm, topology=PodTopology(2, 2))
+
+
+# ----------------------------------------------------------------------
+# the pod_sync tradeoff: emergent, flips with trunk bandwidth
+# ----------------------------------------------------------------------
+
+def _tokens(sync, trunk_bw):
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e9,
+                          tokens_per_step=4096)
+    c = pod_cluster(4, 2, tm, sync=sync, trunk_bw=trunk_bw)
+    tokens = c.run(4)["tokens_per_s"]
+    # conservation: every trunk reservation was returned
+    assert c.runtime.ledger.reserved(TRUNK, OUT) == pytest.approx(0.0)
+    return tokens
+
+
+def test_compressed_sync_wins_on_thin_trunk_loses_on_fat():
+    thin, fat = 25e9, 400e9
+    assert _tokens("compressed", thin) > _tokens("auto", thin)
+    assert _tokens("compressed", fat) < _tokens("auto", fat)
+
+
+def test_single_pod_topology_matches_plain_cluster():
+    """pods=1 is the degenerate case: no trunk traffic, same timeline
+    as an un-namespaced TrainCluster."""
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e9,
+                          tokens_per_step=4096)
+    plain = TrainCluster(2, tm).run(4)
+    podded = pod_cluster(1, 2, tm).run(4)
+    assert podded["sim_seconds"] == pytest.approx(plain["sim_seconds"])
+    assert podded["tokens_per_s"] == pytest.approx(plain["tokens_per_s"])
+
+
+# ----------------------------------------------------------------------
+# pod-local failure: detect -> resize -> resume, bit-identical losses
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def numeric_pieces():
+    from repro.configs import RunConfig, get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import TokenPipeline
+    from repro.train.train_step import make_train_step
+    cfg = get_config("internlm2-1.8b").reduced()
+    run = RunConfig(learning_rate=3e-3, warmup_steps=2, total_steps=12)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    step_fn = jax.jit(make_train_step(cfg, run, impl="ref"))
+    pipeline = TokenPipeline(cfg, shape, seed=0)
+    return cfg, step_fn, pipeline
+
+
+def _numeric_pod_cluster(pieces, ckpt_dir, fail_at):
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.models.params import init_params
+    from repro.optim.adamw import adamw_init
+    cfg, step_fn, pipeline = pieces
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    tm = ClusterTimeModel(compute_s=0.05, grad_bytes=1e8, ckpt_bytes=1e8,
+                          tokens_per_step=4 * 32)
+    return pod_cluster(
+        2, 2, tm, step_fn=step_fn, params=params,
+        opt_state=adamw_init(params), batch_at=pipeline.batch_at,
+        ckpt=CheckpointManager(str(ckpt_dir), every=4, keep=3),
+        heartbeat_every=0.2, heartbeat_timeout=1.0, fail_at=fail_at)
+
+
+def test_pod_leader_failure_detect_resize_resume_bit_identical(
+        tmp_path, numeric_pieces):
+    """Losing pod 1's *leader* (node2) mid-run: the watchdog fires, the
+    fleet resizes to 3 nodes, node3 inherits pod-1 leadership for the
+    trunk sync, and the loss curve stays bit-identical to the
+    uninterrupted run."""
+    ref = _numeric_pod_cluster(numeric_pieces, tmp_path / "ref", None)
+    ref.run(10)
+    fl = _numeric_pod_cluster(numeric_pieces, tmp_path / "fl",
+                              ("node2", 6))
+    summary = fl.run(10)
+
+    kinds = [e["event"] for e in summary["events"]]
+    assert kinds == ["node_silent", "failure_detected", "elastic_resize"]
+    assert summary["events"][2]["nodes"] == 3
+    assert summary["nodes"] == 3
+
+    ref_losses = {h["step"]: h["loss"] for h in ref.history}
+    fl_losses = {h["step"]: h["loss"] for h in fl.history}
+    assert sorted(fl_losses) == sorted(ref_losses) == list(range(10))
+    for k in ref_losses:
+        assert fl_losses[k] == ref_losses[k], k
+
+    # the failure run paid for re-run steps + still paid the trunk
+    assert summary["sim_seconds"] > ref.runtime.clock.now
+    assert fl.runtime.ledger.reserved(TRUNK, OUT) == pytest.approx(0.0)
+
+
+# ----------------------------------------------------------------------
+# launcher path: --simulate N --pods P
+# ----------------------------------------------------------------------
+
+def test_launch_train_simulate_pods_cli(capsys):
+    from repro.launch.train import main
+    cluster = main(["--arch", "internlm2-1.8b", "--reduced", "--steps", "3",
+                    "--simulate", "8", "--pods", "4", "--ckpt-every", "0"])
+    out = capsys.readouterr().out
+    assert "pods=4x8 pod_sync=auto" in out
+    assert "reserved after run = 0" in out
+    assert cluster.topology.total_nodes == 32
+    assert TRUNK in cluster.fabric

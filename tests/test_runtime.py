@@ -446,3 +446,79 @@ def test_prefill_bucketing_matches_exact(small_lm):
         eng.run()
         outs[bucketed] = [r.out_tokens for r in reqs]
     assert outs[True] == outs[False]
+
+
+# ----------------------------------------------------------------------
+# fast event core: heap compaction + indexed bucket accessors
+# ----------------------------------------------------------------------
+
+def test_clock_compacts_tombstones_and_keeps_order():
+    clock = SimClock()
+    hits = []
+    keep = [clock.schedule(100.0 + i, lambda i=i: hits.append(i))
+            for i in range(4)]
+    dead = [clock.schedule(float(i), lambda: hits.append("dead"))
+            for i in range(4 * SimClock.COMPACT_MIN)]
+    for ev in dead:
+        clock.cancel(ev)
+    # compaction fired (tombstones dominated the heap) and dropped them
+    assert clock.compactions >= 1
+    assert clock.pending == len(keep)
+    clock.cancel(dead[0])          # double-cancel: no tombstone recount
+    assert clock.pending == len(keep)
+    clock.run()
+    assert hits == [0, 1, 2, 3]    # survivors fire in time order
+    assert clock.pending == 0
+
+
+def test_clock_small_cancel_counts_never_compact():
+    clock = SimClock()
+    ev = clock.schedule(1.0, lambda: None)
+    clock.schedule(2.0, lambda: None)
+    clock.cancel(ev)
+    assert clock.compactions == 0 and clock.pending == 1
+
+
+def test_active_transfers_and_occupancy_are_per_path():
+    fabric = Fabric.of(Path("a", 10.0), Path("b", 10.0))
+    rt = FabricRuntime(fabric)
+    ta = rt.transfer("a", 5.0, flow="fa")
+    tb1 = rt.transfer("b", 5.0, flow="fb")
+    tb2 = rt.transfer("b", 100.0, flow="fb2")
+    rt.clock.run(until=0.1)
+    assert rt.active_transfers("a") == [ta]
+    assert set(rt.active_transfers("b")) == {tb1, tb2}
+    assert set(rt.active_transfers()) == {ta, tb1, tb2}
+    assert rt.occupancy("a", OUT) > 0 and rt.occupancy("a", "in") == 0.0
+    rt.clock.run(until=5.0)        # a and b's short transfer complete
+    assert ta.done and tb1.done and not tb2.done
+    assert rt.active_transfers("a") == []
+    assert rt.active_transfers("b") == [tb2]
+    assert rt.occupancy("a", OUT) == 0.0
+    rt.clock.run()
+    assert rt.active_transfers() == []
+
+
+def test_runtime_rejects_unknown_rebalance_mode():
+    with pytest.raises(ValueError):
+        FabricRuntime(Fabric.of(Path("p", 1.0)), rebalance="bogus")
+
+
+def test_global_mode_matches_incremental_end_to_end():
+    """One mixed workload (shared group, tenant weights via max_rate
+    caps, cancels) must end at the same simulated instant with the
+    same per-transfer finish times in both rebalance modes."""
+    def run(mode):
+        fabric = Fabric.of(Path("h", 100.0, shared_group="g"),
+                           Path("s", 40.0, shared_group="g"),
+                           concurrency_discount=0.2)
+        rt = FabricRuntime(fabric, rebalance=mode)
+        ts = [rt.transfer("h" if i % 2 else "s", 10.0 + i,
+                          flow=f"f{i % 3}", max_rate=25.0 if i % 4 else 1e9)
+              for i in range(12)]
+        rt.clock.at(0.5, lambda: rt.cancel(ts[3]))
+        rt.clock.run()
+        return [(t.finished_at, t.canceled, t.remaining) for t in ts], \
+            rt.clock.now, rt.clock.processed
+
+    assert run("incremental") == run("global")

@@ -1,0 +1,182 @@
+"""Fast event core: the incremental per-(path,direction) rebalancer
+must be observationally identical to the settle-everything oracle.
+
+Property: replaying one randomized schedule of
+issue / cancel / cancel-and-reissue ops — across paths that share an
+interference group, with mixed QoS weights and max_rate caps, and with
+deliberately colliding op instants — under ``rebalance="global"`` and
+``rebalance="incremental"`` produces *bit-identical* (time, rate,
+remaining) traces, and the shared ledger conserves per
+(path, direction) in both modes.
+
+The seeded-RNG replays below always run; when hypothesis is installed
+(importorskip pattern, as in test_property.py) the same harness is
+additionally driven by generated schedules with shrinking.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.fabric import Fabric, IN, OUT, Path
+from repro.core.runtime import FabricRuntime
+from repro.tenancy.qos import QoSPolicy, Tenant
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("simcore", max_examples=30, deadline=None)
+    settings.load_profile("simcore")
+
+PATHS = ("h0", "s0", "net")
+DIRS = (OUT, IN)
+PROBES = (1.0, 3.0, 7.0)
+
+
+def _fabric() -> Fabric:
+    # h0 and s0 share one interference group (the PCIe socket shape
+    # from train_fabric); net stands alone.
+    return Fabric.of(Path("h0", 100.0, shared_group="pcie0"),
+                     Path("s0", 40.0, shared_group="pcie0"),
+                     Path("net", 200.0),
+                     concurrency_discount=0.3)
+
+
+def _runtime(mode: str) -> FabricRuntime:
+    qos = QoSPolicy([Tenant("serve", weight=3.0),
+                     Tenant("train", weight=1.0)])
+    return FabricRuntime(_fabric(), qos=qos, rebalance=mode)
+
+
+def _settled_remaining(t) -> float:
+    """What ``t.remaining`` would read if settled right now — the
+    anchor-based lazy settle leaves ``remaining`` stale while the rate
+    is unchanged, in *both* modes, so probes must settle explicitly."""
+    dt = t.runtime.clock.now - t._last_update
+    if t.done or t.rate <= 0 or dt <= 0:
+        return t.remaining
+    return max(0.0, t.remaining - t.rate * dt)
+
+
+def _run_schedule(specs, cancels, mode):
+    """Replay one op schedule; return the full observable trace."""
+    rt = _runtime(mode)
+    trace = []
+    ts = []
+
+    def issue(path, direction, amount, flow, tenant, max_rate):
+        t = rt.transfer(path, amount, direction=direction, flow=flow,
+                        tenant=tenant, max_rate=max_rate)
+        t.add_callback(lambda t: trace.append(
+            ("done", t.path, t.direction, t.flow, rt.clock.now,
+             t.canceled, t.remaining)))
+        ts.append(t)
+
+    def do_cancel(pick, reissue):
+        if not ts:
+            return
+        t = ts[pick % len(ts)]
+        if t.done:
+            trace.append(("cancel-noop", pick % len(ts), rt.clock.now))
+            return
+        rt.cancel(t)
+        trace.append(("cancel", t.path, t.direction, t.flow,
+                      rt.clock.now, t.remaining))
+        if reissue and t.remaining > 0:
+            issue(t.path, t.direction, t.remaining, t.flow + "+r",
+                  t.tenant, t.max_rate)
+
+    def probe():
+        snap = tuple((t.done, t.rate, _settled_remaining(t)) for t in ts)
+        held = tuple(rt.ledger.reserved(p, d) for p in PATHS for d in DIRS)
+        trace.append(("probe", rt.clock.now, snap, held))
+
+    for (at, p, d, amount, fl, tenant, max_rate) in specs:
+        rt.clock.at(at, issue, PATHS[p], DIRS[d], amount, f"f{fl}",
+                    tenant, max_rate)
+    for (at, pick, reissue) in cancels:
+        rt.clock.at(at, do_cancel, pick, reissue)
+    for at in PROBES:
+        rt.clock.at(at, probe)
+    rt.clock.run()
+
+    assert all(t.done for t in ts)
+    for p in PATHS:
+        for d in DIRS:
+            # conservation: every reservation was returned
+            assert rt.ledger.reserved(p, d) == pytest.approx(0.0, abs=1e-6)
+    trace.append(("end", rt.clock.now, rt.clock.processed))
+    return trace
+
+
+# op instants quantized to 1/8 s so schedules collide on purpose —
+# same-instant coalescing and tie ordering are part of the contract
+_TENANTS = ("serve", "train", None)
+_MAX_RATES = (math.inf, 5.0, 17.0)
+
+
+def _random_schedule(seed, n_transfers=20, n_cancels=6):
+    rng = np.random.default_rng(seed)
+    specs = [(int(rng.integers(0, 65)) * 0.125,
+              int(rng.integers(0, len(PATHS))),
+              int(rng.integers(0, len(DIRS))),
+              float(rng.uniform(0.5, 40.0)),
+              int(rng.integers(0, 5)),
+              _TENANTS[int(rng.integers(0, len(_TENANTS)))],
+              _MAX_RATES[int(rng.integers(0, len(_MAX_RATES)))])
+             for _ in range(n_transfers)]
+    cancels = [(int(rng.integers(0, 65)) * 0.125,
+                int(rng.integers(0, 31)),
+                bool(rng.integers(0, 2)))
+               for _ in range(n_cancels)]
+    return specs, cancels
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_matches_global_seeded(seed):
+    """Seeded replays of the randomized schedule — always runs, no
+    hypothesis needed."""
+    specs, cancels = _random_schedule(seed)
+    inc = _run_schedule(specs, cancels, "incremental")
+    glo = _run_schedule(specs, cancels, "global")
+    assert inc == glo
+
+
+@pytest.mark.parametrize("flows", ["same", "distinct"])
+def test_discount_flip_consistent_across_modes(flows):
+    """Force the multi-flow discount on and off repeatedly: every
+    transfer on the same flow (never discounted) vs distinct flows
+    (discounted once >= 2 concurrent) — both replays must agree across
+    modes (the flag flip forces a full-group rebalance)."""
+    specs, _ = _random_schedule(99, n_transfers=16, n_cancels=0)
+    mutated = [(at, p, d, amount, 0 if flows == "same" else i, tenant, mr)
+               for i, (at, p, d, amount, _, tenant, mr)
+               in enumerate(specs)]
+    inc = _run_schedule(mutated, [], "incremental")
+    glo = _run_schedule(mutated, [], "global")
+    assert inc == glo
+
+
+if HAVE_HYPOTHESIS:
+    _instant = st.integers(0, 64).map(lambda k: k * 0.125)
+    _transfer = st.tuples(
+        _instant,
+        st.integers(0, len(PATHS) - 1),
+        st.integers(0, len(DIRS) - 1),
+        st.floats(0.5, 40.0, allow_nan=False, allow_infinity=False),
+        st.integers(0, 4),
+        st.sampled_from(_TENANTS),
+        st.sampled_from(_MAX_RATES),
+    )
+    _cancel = st.tuples(_instant, st.integers(0, 30), st.booleans())
+
+    @given(st.lists(_transfer, min_size=1, max_size=25),
+           st.lists(_cancel, max_size=8))
+    def test_incremental_matches_global_bit_identical(specs, cancels):
+        inc = _run_schedule(specs, cancels, "incremental")
+        glo = _run_schedule(specs, cancels, "global")
+        assert inc == glo

@@ -2,9 +2,12 @@
 
 The §6.1 story as tokens/s: staging checkpoint shards over the SoC
 path vs the host path while the host direction is busy with gradient
-allreduce traffic (and the ordering flip when the fabric is idle), and
-occupancy-driven straggler mitigation under a loaded host path. All
-timing-only — the numeric stream is exercised by tests/test_cluster.py.
+allreduce traffic (and the ordering flip when the fabric is idle),
+occupancy-driven straggler mitigation under a loaded host path, and
+the bucketed-DDP overlap sweep (K per-layer-group gradient buckets
+issued during backward vs single-shot allreduce). All timing-only —
+the numeric stream is exercised by tests/test_cluster.py and
+tests/test_overlap.py.
 """
 from __future__ import annotations
 
@@ -54,6 +57,40 @@ def straggler_part() -> None:
         f"win={mitigated / plain - 1:.1%}")
 
 
+def bucket_part() -> None:
+    """Bucketed DDP overlap: K per-layer-group gradient buckets, each
+    allreduce issued as its backward slice completes, vs single-shot
+    allreduce — on the comm-bound headline config (comm ~ compute)."""
+    def step_s(buckets):
+        tm = ClusterTimeModel(compute_s=0.6, grad_bytes=2e9,
+                              tokens_per_step=4096 * 16, buckets=buckets)
+        cluster = TrainCluster(NODES, tm)
+        s = cluster.run(STEPS)
+        return s["sim_seconds"] / s["steps"]
+
+    t1 = step_s(1)
+    row("train/bucketed_k1", t1 * 1e6, "single-shot allreduce")
+    for k in (2, 4, 8):
+        tk = step_s(k)
+        row(f"train/bucketed_k{k}", tk * 1e6,
+            f"win={100 * (1 - tk / t1):.1f}% vs k1")
+
+    # hierarchical: 2 pods over a thin trunk, per-bucket leader rings
+    from repro.train.pods import pod_cluster
+
+    def pod_step_s(buckets):
+        tm = ClusterTimeModel(compute_s=0.6, grad_bytes=5e8,
+                              tokens_per_step=4096 * 16, buckets=buckets)
+        s = pod_cluster(2, 2, tm, sync="compressed",
+                        trunk_bw=25e9).run(STEPS)
+        return s["sim_seconds"] / s["steps"]
+
+    p1, p4 = pod_step_s(1), pod_step_s(4)
+    row("train/bucketed_pods_thin", p4 * 1e6,
+        f"win={100 * (1 - p4 / p1):.1f}% vs k1 "
+        f"(2x2 pods, compressed thin trunk)")
+
+
 def elastic_part() -> None:
     """Node failure mid-run: detect -> resize -> resume, in sim time."""
     tm = ClusterTimeModel(compute_s=0.05, grad_bytes=2e9,
@@ -70,9 +107,11 @@ def elastic_part() -> None:
 
 
 def main() -> None:
-    print("# simulated train cluster: ckpt contention / stragglers / elastic")
+    print("# simulated train cluster: ckpt contention / stragglers / "
+          "elastic / bucketed overlap")
     contention_part()
     straggler_part()
+    bucket_part()
     elastic_part()
 
 

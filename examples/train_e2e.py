@@ -37,6 +37,13 @@ def main():
           f"(ckpts in {ckpt_dir}, 2 replicas)")
     assert last < first, "training did not improve the loss"
 
+    # bucketed-DDP overlap dry run: the same launcher simulates the
+    # config as 2 trainer nodes with K=4 per-layer-group gradient
+    # buckets and prints the measured win over single-shot allreduce
+    print("[example] simulating bucketed DDP overlap (K=4, 2 nodes)...")
+    train_main(["--arch", args.arch, "--steps", "6", "--reduced",
+                "--simulate", "2", "--buckets", "4"])
+
 
 if __name__ == "__main__":
     main()

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
 # plus the runtime/train/colocation/kvserve/offload/scale/simcore
-# benchmark sections with schema-validated JSON output (BENCH_8.json —
-# the PR-8 perf trajectory record), a trajectory check that the PR-7
-# headline rows recorded in the committed BENCH_7.json have not
-# regressed past tolerance, and a simulator-speed floor: the event
-# core must stay >= BENCH_7's 334 events/s on the fleet scenario.
+# benchmark sections with schema-validated JSON output (BENCH_9.json —
+# the PR-9 perf trajectory record), a trajectory check that the PR-8
+# headline rows recorded in the committed BENCH_8.json have not
+# regressed past tolerance, a simulator-speed floor (the event core
+# must stay >= 334 events/s on the fleet scenario), and the bucketed
+# DDP overlap-win floor: K=4 must beat single-shot allreduce by >= 20%
+# on the comm-bound headline config.
 #   scripts/ci.sh            # tests + runtime,...,offload,scale,simcore
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
@@ -13,14 +15,14 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_8.json \
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_9.json \
     --only runtime,train,colocation,kvserve,offload,scale,simcore
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_8.json") as f:
+with open("BENCH_9.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -44,6 +46,9 @@ else:
                      "train/ckpt_soc_busy", "train/ckpt_host_busy",
                      "train/ckpt_soc_idle", "train/ckpt_host_idle",
                      "train/straggler_mitigated", "train/elastic_detect",
+                     "train/bucketed_k1", "train/bucketed_k2",
+                     "train/bucketed_k4", "train/bucketed_k8",
+                     "train/bucketed_pods_thin",
                      "colocation/serve_solo_p99",
                      "colocation/serve_unmanaged_p99",
                      "colocation/serve_managed_p99",
@@ -67,14 +72,15 @@ else:
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_8.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_8.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_9.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_9.json OK ({len(doc['rows'])} rows)")
 EOF
 
-# trajectory check: PR-7 headline rows must stay within tolerance of
-# the committed BENCH_7.json, the offload winner must still be
-# soc-compress, and the event core must not regress below BENCH_7's
-# 334 events/s floor on the fleet scenario.  (These are deterministic
+# trajectory check: PR-8 headline rows must stay within tolerance of
+# the committed BENCH_8.json, the offload winner must still be
+# soc-compress, the event core must not regress below the 334 events/s
+# floor on the fleet scenario, and bucketed DDP overlap (K=4) must
+# keep >= 20% win over single-shot allreduce.  (Deterministic
 # simulated timings, so 25% is generous — it only catches genuine
 # model changes, not jitter.  The events/s floor is wall-clock, set
 # ~10x below the post-rework speed so machine noise can't trip it.)
@@ -83,6 +89,7 @@ import json, re, sys
 
 TOL = 0.25
 EVENTS_PER_S_FLOOR = 334.0  # BENCH_7's scale/runtime_events_per_s
+OVERLAP_WIN_FLOOR = 20.0    # % win of train/bucketed_k4 over k1
 HEADLINES = ("runtime/overlapped_pair", "colocation/serve_managed_p99",
              "offload/ckpt_soc_compress_busy", "offload/ckpt_host_compress_busy")
 
@@ -90,14 +97,14 @@ def by_name(path):
     with open(path) as f:
         return {r["name"]: r for r in json.load(f)["rows"]}
 
-old, new = by_name("BENCH_7.json"), by_name("BENCH_8.json")
+old, new = by_name("BENCH_8.json"), by_name("BENCH_9.json")
 problems = []
 for name in HEADLINES:
     if name not in old:
-        problems.append(f"baseline BENCH_7.json missing {name!r}")
+        problems.append(f"baseline BENCH_8.json missing {name!r}")
         continue
     if name not in new:
-        problems.append(f"BENCH_8.json missing {name!r}")
+        problems.append(f"BENCH_9.json missing {name!r}")
         continue
     o, n = old[name]["us"], new[name]["us"]
     drift = abs(n - o) / o
@@ -124,12 +131,26 @@ else:
     if ev_s < EVENTS_PER_S_FLOOR:
         problems.append(f"event core regressed: {ev_s:,.0f} events/s "
                         f"< floor {EVENTS_PER_S_FLOOR:,.0f}")
+k4 = new.get("train/bucketed_k4", {})
+m = re.search(r"win=([\d.]+)%", k4.get("derived", ""))
+if m is None:
+    problems.append("train/bucketed_k4 has no win= in derived: "
+                    f"{k4.get('derived')!r}")
+else:
+    win = float(m.group(1))
+    status = "FAIL" if win < OVERLAP_WIN_FLOOR else "ok"
+    print(f"  train/bucketed_k4: overlap win {win:.1f}% "
+          f"(floor {OVERLAP_WIN_FLOOR:.0f}%) {status}")
+    if win < OVERLAP_WIN_FLOOR:
+        problems.append(f"bucketed overlap win {win:.1f}% "
+                        f"< floor {OVERLAP_WIN_FLOOR:.0f}%")
 if problems:
-    sys.exit("BENCH_7 -> BENCH_8 trajectory check failed:\n  "
+    sys.exit("BENCH_8 -> BENCH_9 trajectory check failed:\n  "
              + "\n  ".join(problems))
-print("trajectory check OK (PR-7 headline rows within "
+print("trajectory check OK (PR-8 headline rows within "
       f"{TOL:.0%}, offload winner still soc-compress, event core above "
-      f"{EVENTS_PER_S_FLOOR:,.0f} ev/s)")
+      f"{EVENTS_PER_S_FLOOR:,.0f} ev/s, bucketed overlap win above "
+      f"{OVERLAP_WIN_FLOOR:.0f}%)")
 EOF
 
 if [[ "${1:-}" == "--bench" ]]; then

@@ -556,6 +556,28 @@ class FabricRuntime:
                 name: str = "barrier") -> Barrier:
         return Barrier(self, parties, on_release=on_release, name=name)
 
+    def barrier_pool(self, count: int, parties: int, *,
+                     name: str = "barrier",
+                     on_release: Optional[Callable[[int, int], None]] = None,
+                     ) -> List[Barrier]:
+        """``count`` independent cyclic barriers over the same ``parties``
+        membership — the rendezvous set of a staggered collective, where
+        each slice of the work (a DDP gradient bucket, a pipeline stage)
+        closes on its own barrier so slices can be in flight
+        concurrently while each still synchronizes all parties. The
+        pool's barriers are reused generation after generation like any
+        cyclic Barrier; ``on_release(index, generation)`` identifies
+        which slice just closed."""
+        if count < 1:
+            raise ValueError(f"barrier pool {name}: count must be >= 1")
+        pool: List[Barrier] = []
+        for i in range(count):
+            hook = None if on_release is None else \
+                (lambda gen, i=i: on_release(i, gen))
+            pool.append(Barrier(self, parties, on_release=hook,
+                                name=f"{name}{i}"))
+        return pool
+
     def every(self, interval: float, fn: Callable[[], None], *,
               name: str = "periodic",
               start_delay: Optional[float] = None) -> Process:

@@ -68,12 +68,17 @@ class StragglerDetector:
                         if v > self.threshold * med}
         return sorted(flagged)
 
-    def rebalanced_shares(self, total_microbatches: int) -> Dict[str, int]:
+    def rebalanced_shares(self, total_microbatches: int,
+                          nodes: Optional[List[str]] = None) -> Dict[str, int]:
         """Give each node work inversely proportional to its step time —
-        the skew-taming advice (#1) applied to compute instead of memory."""
-        if not self.ema:
+        the skew-taming advice (#1) applied to compute instead of memory.
+        ``nodes`` restricts the split to the named (live) nodes; dead
+        nodes' stale EMA entries must not absorb shares."""
+        ema = self.ema if nodes is None \
+            else {n: self.ema[n] for n in nodes if n in self.ema}
+        if not ema:
             return {}
-        inv = {n: 1.0 / v for n, v in self.ema.items()}
+        inv = {n: 1.0 / v for n, v in ema.items()}
         z = sum(inv.values())
         raw = {n: total_microbatches * w / z for n, w in inv.items()}
         shares = {n: max(1, int(round(r))) for n, r in raw.items()}
@@ -89,3 +94,24 @@ class StragglerDetector:
                 shares[n] -= 1; drift += 1
             i += 1
         return shares
+
+    def microbatch_shares(self, node_names: List[str],
+                          per_node: int) -> tuple:
+        """Per-node microbatch counts, in ``node_names`` order, for the
+        *real* data path (train/train_step.py ``node_shares``): the
+        rebalanced split when a straggler is flagged and every named
+        node has a time signal, the equal ``per_node`` split otherwise.
+        Always sums to ``per_node * len(node_names)`` — the total jax
+        work per step is invariant, only its placement skews — and the
+        equal fallback is exactly the uniform tuple, which is what lets
+        a consumer dispatch to the unskewed (bit-identical) compute
+        path when there is nothing to rebalance."""
+        equal = tuple([per_node] * len(node_names))
+        if per_node < 1 or len(node_names) < 2:
+            return equal
+        if not self.stragglers() \
+                or any(n not in self.ema for n in node_names):
+            return equal
+        shares = self.rebalanced_shares(per_node * len(node_names),
+                                        nodes=node_names)
+        return tuple(shares[n] for n in node_names)

@@ -10,7 +10,17 @@ global step is, per node:
                       path (device->host OUT, host->device IN) plus a
                       ring exchange on the shared ``net`` path, closed
                       by a ``runtime.barrier()`` — the data-parallel
-                      synchronization point;
+                      synchronization point. With
+                      ``ClusterTimeModel.buckets = K > 1`` the gradient
+                      is split into K per-layer-group buckets
+                      (``bucket_plan``) and each bucket's allreduce is
+                      issued *as soon as its slice of backward
+                      completes* — classic bucketed-DDP overlap: late
+                      buckets compute while early buckets communicate,
+                      each bucket closed by its own cyclic barrier, and
+                      the overlap win (or its absence on an idle-fast
+                      network) emerges from the ledger's scheduling,
+                      never from a constant;
   checkpoint staging  on checkpoint steps, the node's checkpoint shard
                       is staged over its SoC *or* host path *in the
                       same ledger* as the gradient traffic, so
@@ -117,6 +127,41 @@ TRAIN_FABRICS: Dict[str, Callable[[int], Fabric]] = {
 
 
 @dataclass(frozen=True)
+class BucketSlice:
+    """One layer-group's slice of the per-step cost: the compute time
+    of its backward segment and the gradient bytes it produces."""
+    compute_s: float
+    grad_bytes: float
+
+
+def _exact_split(total: float, weights: List[float],
+                 total_w: float) -> List[float]:
+    """Split ``total`` into ``len(weights)`` non-negative float parts,
+    proportional to ``weights``, whose left-to-right float sum is
+    *exactly* ``total``: the split is taken on the integer grid of
+    ``total``'s 53-bit significand, so every partial sum is an integer
+    multiple of one scale below 2**53 — exactly representable, hence
+    summation never rounds. Bucketing changes *when* cost is paid,
+    never how much."""
+    k = len(weights)
+    if total == 0.0:
+        return [0.0] * k
+    m, e = math.frexp(total)
+    scale = math.ldexp(1.0, e - 53)
+    units = int(math.ldexp(m, 53))        # total == units * scale, exact
+    parts: List[float] = []
+    acc, cum = 0, 0.0
+    for w in weights[:-1]:
+        cum += w
+        edge = int(round(units * (cum / total_w)))
+        edge = min(max(edge, acc), units)
+        parts.append((edge - acc) * scale)
+        acc = edge
+    parts.append((units - acc) * scale)
+    return parts
+
+
+@dataclass(frozen=True)
 class ClusterTimeModel:
     """Per-step cost model for one simulated node."""
     compute_s: float                 # roofline compute time per step
@@ -136,6 +181,11 @@ class ClusterTimeModel:
     #                                  pause then takes effect at the
     #                                  next chunk boundary without
     #                                  cancel/re-issue (drain mode)
+    buckets: int = 1                 # per-layer-group gradient buckets:
+    #                                  K > 1 issues each bucket's
+    #                                  allreduce as soon as its slice of
+    #                                  backward completes (classic DDP
+    #                                  overlap); 1 = single-shot
 
     def __post_init__(self):
         if self.ckpt_path not in _CKPT_MODES:
@@ -150,11 +200,36 @@ class ClusterTimeModel:
         if self.chunk_bytes is not None and not self.chunk_bytes > 0:
             raise ValueError(f"chunk_bytes must be > 0, "
                              f"got {self.chunk_bytes}")
+        if self.buckets < 1 or self.buckets != int(self.buckets):
+            raise ValueError(f"buckets must be a positive int, "
+                             f"got {self.buckets}")
+
+    def bucket_plan(self, k: Optional[int] = None, *,
+                    weights: Optional[List[float]] = None
+                    ) -> List[BucketSlice]:
+        """The per-layer-group cost breakdown: ``k`` slices of
+        (compute_s, grad_bytes) whose plain left-to-right sums equal
+        *exactly* the step totals (see ``_exact_split`` — bucketing
+        changes *when* bytes move, never how many). ``weights`` skews
+        the split toward heavier layer groups (e.g. an
+        embedding-dominated first group); default uniform."""
+        k = self.buckets if k is None else k
+        if k < 1:
+            raise ValueError(f"bucket_plan needs k >= 1, got {k}")
+        if weights is None:
+            weights = [1.0] * k
+        if len(weights) != k or any(w <= 0 for w in weights):
+            raise ValueError(f"need {k} positive weights, got {weights}")
+        total_w = math.fsum(weights)
+        cs = _exact_split(self.compute_s, weights, total_w)
+        gs = _exact_split(self.grad_bytes, weights, total_w)
+        return [BucketSlice(c, g) for c, g in zip(cs, gs)]
 
     @classmethod
     def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
                     ckpt_path: str = SOC, grad_dtype_bytes: int = 2,
-                    state_bytes_per_param: int = 10) -> "ClusterTimeModel":
+                    state_bytes_per_param: int = 10,
+                    buckets: int = 1) -> "ClusterTimeModel":
         """Roofline estimate from a model config + batch shape: compute
         is 6*N*D over the cluster's peak FLOP/s; gradient staging is the
         bf16 gradient buffer; the checkpoint shard is params + AdamW
@@ -170,6 +245,7 @@ class ClusterTimeModel:
             ckpt_bytes=state_bytes_per_param * n_params / nodes,
             ckpt_path=ckpt_path,
             tokens_per_step=tokens,
+            buckets=buckets,
         )
 
 
@@ -184,6 +260,7 @@ class ClusterNode:
     proc: Optional[Process] = None
     hb_proc: Optional[Process] = None
     inflight: List[Transfer] = field(default_factory=list)
+    subprocs: List[Process] = field(default_factory=list)  # bucket procs
 
 
 class TrainCluster:
@@ -212,6 +289,8 @@ class TrainCluster:
                  node_compute_scale: Optional[Dict[str, float]] = None,
                  host_load: Optional[Dict[str, float]] = None,
                  mitigate_stragglers: bool = False,
+                 skew_batches: bool = False,
+                 microbatches_per_node: int = 8,
                  fail_at: Optional[Tuple[str, int]] = None,
                  tenant: Optional[str] = None,
                  topology: Any = None):
@@ -243,6 +322,15 @@ class TrainCluster:
         self.heartbeat_every = heartbeat_every
         self.heartbeat_timeout = heartbeat_timeout
         self.mitigate_stragglers = mitigate_stragglers
+        self.skew_batches = skew_batches   # route straggler shares into
+        #                                    real per-node microbatch
+        #                                    counts (train_step
+        #                                    node_shares) — the numeric
+        #                                    twin of share_scale
+        if microbatches_per_node < 1:
+            raise ValueError(f"microbatches_per_node must be >= 1, "
+                             f"got {microbatches_per_node}")
+        self.microbatches_per_node = microbatches_per_node
         self.fail_at = fail_at
         self.tenant = tenant             # QoS tag on every fabric transfer
         self.offload = OffloadStats()    # host-cycles-saved accounting
@@ -295,6 +383,12 @@ class TrainCluster:
         self.events: List[dict] = []
         self.mesh_shape: Tuple[int, ...] = ()
         self._barrier: Optional[Barrier] = None
+        self._bucket_barriers: List[Barrier] = []
+        #: per-(step, bucket) overlap record: t_issue (first node issued
+        #: the bucket's allreduce) -> t_done (the bucket's barrier
+        #: released) — the measurable overlap timeline
+        self.bucket_timeline: List[dict] = []
+        self._bucket_open: Dict[Tuple[int, int], float] = {}
         self._step = 0
         self._end = 0
         self._step_start = 0.0
@@ -468,29 +562,32 @@ class TrainCluster:
             int(tm.ckpt_bytes), int(wire_bytes), ops=ops,
             offloaded=(mode == SOC_COMPRESS))
 
-    def _pod_sync(self, node: ClusterNode):
-        """Inter-pod gradient sync over the shared DCN trunk (see
-        train/pods.py). Only the pod *leader* — the lowest-indexed live
-        node of the pod, so leadership survives pod-local failures —
-        touches the trunk: a P_live-way ring exchange of the full
-        gradient, ``2 (P-1)/P * grad_bytes * nodes`` wire bytes per
-        leader, all leaders contending on one trunk budget. Under
+    def _pod_sync(self, node: ClusterNode, grad_bytes: float, tag: str):
+        """Inter-pod sync of one gradient slice over the shared DCN
+        trunk (see train/pods.py). Only the pod *leader* — the
+        lowest-indexed live node of the pod, so leadership survives
+        pod-local failures — touches the trunk: a P_live-way ring
+        exchange of the slice's pod-aggregate bytes,
+        ``2 (P-1)/P * grad_bytes * nodes`` wire bytes per leader, all
+        leaders contending on one trunk budget. Under
         ``sync="compressed"`` the leader first spends the codec ops on
         its pod-local host socket, then moves ``compress_ratio`` of the
         bytes — the simulated twin of RunConfig.pod_sync="compressed".
-        Non-leaders skip straight to the global barrier, which is what
-        makes the trunk time part of every node's step. Pause-safe via
-        _tenant_compute/_tenant_xfer like all tenant traffic."""
+        Non-leaders skip straight to the closing barrier, which is what
+        makes the trunk time part of every node's step. Bucketed runs
+        call this once per bucket (``grad_bytes`` = the slice, ``tag``
+        carries the bucket suffix), so several leader-rings are in
+        flight on the trunk at once — the hierarchical pipeline that
+        keeps trunk and pod-local paths concurrently busy. Pause-safe
+        via _tenant_compute/_tenant_xfer like all tenant traffic."""
         topo = self.topology
-        live = self._live()
-        p = topo.pod_of(node.index)
-        pod_live = [n.index for n in live if topo.pod_of(n.index) == p]
-        if not pod_live or node.index != min(pod_live):
+        live = [n.index for n in self._live()]
+        if topo.leader_of(topo.pod_of(node.index), live) != node.index:
             return
-        live_pods = len({topo.pod_of(n.index) for n in live})
+        live_pods = len({topo.pod_of(i) for i in live})
         if live_pods < 2:
             return
-        g_full = self.tm.grad_bytes * len(self.nodes)
+        g_full = grad_bytes * len(self.nodes)
         wire = 2.0 * (live_pods - 1) / live_pods * g_full
         if wire <= 0:
             return
@@ -499,14 +596,56 @@ class TrainCluster:
             if ops > 0:
                 yield from self._tenant_compute(
                     node, topo.node_path(node.index, "cpu:host"), ops,
-                    f"podcodec:{node.name}")
+                    f"podcodec:{tag}")
             wire *= topo.compress_ratio
         yield from self._tenant_xfer(node, topo.trunk, wire, OUT,
-                                     f"podsync:{node.name}")
+                                     f"podsync:{tag}")
 
     # -- the per-node step loop -----------------------------------------
+    def _grad_bucket(self, node: ClusterNode, grad_bytes: float, tag: str):
+        """One gradient slice's allreduce, hierarchical: device->host
+        staging (host OUT), the pod-local ring on the node's net path,
+        the leader's inter-pod trunk ring under a topology, then
+        host->device (host IN). ``tag`` names the flows (per-bucket tags
+        keep concurrent buckets *distinct* flows, so the §4.1 discount
+        emerges across in-flight buckets exactly as it does across
+        tenants). Single-shot steps run this inline with
+        ``tag=node.name`` — byte- and flow-identical to the pre-bucket
+        schedule."""
+        host_p = self._node_path(node.index, HOST)
+        yield from self._tenant_xfer(node, host_p, grad_bytes, OUT,
+                                     f"grad:{tag}")
+        live = max(self._ring_peers(node), 1)
+        ring = 2.0 * (live - 1) / live * grad_bytes
+        if ring > 0:
+            yield from self._tenant_xfer(node, self._net_path(node.index),
+                                         ring, OUT, f"ring:{tag}")
+        if self.topology is not None:
+            yield from self._pod_sync(node, grad_bytes, tag)
+        yield from self._tenant_xfer(node, host_p, grad_bytes, IN,
+                                     f"grad:{tag}")
+
+    def _bucket_proc(self, node: ClusterNode, k: int, grad_bytes: float,
+                     own_done: Dict[str, float]):
+        """One in-flight bucket: the slice's allreduce closed by the
+        bucket's own cyclic barrier. Records the node's *own* completion
+        time before the rendezvous (straggler timing must not be
+        flattened by the barrier) and stamps the timeline at release."""
+        yield from self._grad_bucket(node, grad_bytes,
+                                     f"{node.name}:b{k}")
+        own_done["t"] = max(own_done["t"], self.runtime.clock.now)
+        yield self._bucket_barriers[k].arrive()
+
+    def _on_bucket_done(self, k: int, _generation: int) -> None:
+        t_issue = self._bucket_open.pop((self._step, k), None)
+        self.bucket_timeline.append({
+            "step": self._step, "bucket": k,
+            "t_issue": t_issue, "t_done": self.runtime.clock.now})
+
     def _node_proc(self, node: ClusterNode):
         rt, tm = self.runtime, self.tm
+        plan = tm.bucket_plan()
+        bucketed = len(plan) > 1 and tm.grad_bytes > 0
         while node.alive and self._step < self._end:
             step = self._step
             if self.fail_at is not None and node.name == self.fail_at[0] \
@@ -519,6 +658,7 @@ class TrainCluster:
                 return
             t0 = rt.clock.now
             node.inflight = [t for t in node.inflight if not t.done]
+            node.subprocs = []
             ck = None
             ck_mode: Optional[str] = None
             if self._ckpt_step(step) and not self._paused:
@@ -530,27 +670,36 @@ class TrainCluster:
                                      flow=f"ckpt:{node.name}",
                                      tenant=self.tenant)
                     node.inflight.append(ck)
-            yield tm.compute_s * node.compute_scale * node.share_scale
-            if tm.grad_bytes > 0:
-                host_p = self._node_path(node.index, HOST)
-                # sample external host-direction occupancy *before* our
-                # own gradient flow joins the path (detector input)
-                self.straggler.observe_ledger(node.name, rt.ledger, host_p)
-                yield from self._tenant_xfer(node, host_p,
-                                             tm.grad_bytes, OUT,
-                                             f"grad:{node.name}")
-                live = max(self._ring_peers(node), 1)
-                ring = 2.0 * (live - 1) / live * tm.grad_bytes
-                if ring > 0:
-                    yield from self._tenant_xfer(node,
-                                                 self._net_path(node.index),
-                                                 ring, OUT,
-                                                 f"ring:{node.name}")
-                if self.topology is not None:
-                    yield from self._pod_sync(node)
-                yield from self._tenant_xfer(node, host_p,
-                                             tm.grad_bytes, IN,
-                                             f"grad:{node.name}")
+            own_done = {"t": t0}
+            if bucketed:
+                # staggered DDP pipeline: run each layer group's slice
+                # of backward, then immediately put its bucket's
+                # allreduce in flight — late buckets compute while
+                # early buckets communicate, and the step's comm time
+                # hides behind the remaining compute
+                self.straggler.observe_ledger(
+                    node.name, rt.ledger, self._node_path(node.index, HOST))
+                for k, sl in enumerate(plan):
+                    yield sl.compute_s * node.compute_scale \
+                        * node.share_scale
+                    self._bucket_open.setdefault((step, k), rt.clock.now)
+                    node.subprocs.append(rt.process(
+                        self._bucket_proc(node, k, sl.grad_bytes, own_done),
+                        name=f"bucket:{node.name}:{k}"))
+                for bp in node.subprocs:
+                    yield bp                  # join: every bucket closed
+            else:
+                yield tm.compute_s * node.compute_scale * node.share_scale
+                if tm.grad_bytes > 0:
+                    # sample external host-direction occupancy *before*
+                    # our own gradient flow joins the path (detector
+                    # input)
+                    self.straggler.observe_ledger(
+                        node.name, rt.ledger,
+                        self._node_path(node.index, HOST))
+                    yield from self._grad_bucket(node, tm.grad_bytes,
+                                                 node.name)
+                    own_done["t"] = rt.clock.now
             if ck is not None:
                 yield ck                      # staging is on the step path
                 if ck.canceled and ck.remaining > 1e-9:
@@ -568,7 +717,16 @@ class TrainCluster:
                     yield from self._tenant_xfer(
                         node, self._node_path(node.index, mode),
                         tm.ckpt_bytes, OUT, f"ckpt:{node.name}")
-            self.straggler.observe(node.name, rt.clock.now - t0)
+            if bucketed:
+                # the node's own finish line: its last bucket's
+                # completion (pre-barrier) or its checkpoint wait —
+                # not the globally-synchronized join time
+                own_t = own_done["t"]
+                if self._ckpt_step(step):
+                    own_t = max(own_t, rt.clock.now)
+                self.straggler.observe(node.name, own_t - t0)
+            else:
+                self.straggler.observe(node.name, rt.clock.now - t0)
             yield self._barrier.arrive()
 
     def _heartbeat(self, node: ClusterNode) -> None:
@@ -587,17 +745,32 @@ class TrainCluster:
         if self.step_fn is not None:
             import jax.numpy as jnp
             batch = self.batch_at(step)
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch, jnp.asarray(step))
+            if self.skew_batches:
+                # close the straggler loop into real data: the
+                # detector's rebalanced split becomes per-node
+                # microbatch counts for the jitted step (static args —
+                # equal shares dispatch to the uniform, bit-identical
+                # path inside train_step)
+                shares = self.straggler.microbatch_shares(
+                    [n.name for n in self._live()],
+                    self.microbatches_per_node)
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, jnp.asarray(step),
+                    node_shares=shares)
+                rec["microbatch_shares"] = list(shares)
+            else:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, jnp.asarray(step))
             rec.update({k: float(v) for k, v in metrics.items()})
             if self.ckpt is not None and self._ckpt_step(step):
                 self.ckpt.save(step, (self.params, self.opt_state),
                                blocking=True)
         if self.mitigate_stragglers and self.straggler.stragglers():
             live = self._live()
-            shares = self.straggler.rebalanced_shares(8 * len(live))
+            per = self.microbatches_per_node
+            shares = self.straggler.rebalanced_shares(per * len(live))
             for n in live:
-                n.share_scale = shares.get(n.name, 8) / 8.0
+                n.share_scale = shares.get(n.name, per) / per
         self.history.append(rec)
         self._step = step + 1
         self._step_start = now
@@ -619,10 +792,14 @@ class TrainCluster:
         now = self.runtime.clock.now
         self.events.append({"t": now, "event": "failure_detected",
                             "node": name, "step": self._step})
-        # quiesce: kill every step process and cancel in-flight transfers
+        # quiesce: kill every step process (and its in-flight bucket
+        # subprocesses) and cancel in-flight transfers
         for n in self.nodes:
             if n.proc is not None:
                 n.proc.kill()
+            for bp in n.subprocs:
+                bp.kill()
+            n.subprocs = []
             for t in n.inflight:
                 if not t.done:
                     self.runtime.cancel(t)
@@ -648,12 +825,23 @@ class TrainCluster:
                             "axes": axes, "resume_step": resume})
         self._step = resume
         self._step_start = now
+        self._bucket_open.clear()    # the aborted step's issue stamps
         self._spawn(survivors)
 
     # -- lifecycle -------------------------------------------------------
     def _spawn(self, members: List[ClusterNode]) -> None:
         self._barrier = self.runtime.barrier(
             len(members), on_release=self._on_step_complete, name="allreduce")
+        if self.tm.buckets > 1 and self.tm.grad_bytes > 0:
+            # one cyclic barrier per bucket: bucket k of a step closes
+            # when every member's bucket-k allreduce lands, independent
+            # of the other buckets — the per-bucket rendezvous that
+            # makes the overlap pipeline safe for the numeric stream
+            self._bucket_barriers = self.runtime.barrier_pool(
+                self.tm.buckets, len(members), name="bucket",
+                on_release=self._on_bucket_done)
+        else:
+            self._bucket_barriers = []
         for n in members:
             n.proc = self.runtime.process(self._node_proc(n),
                                           name=f"step:{n.name}")
@@ -706,6 +894,7 @@ class TrainCluster:
             "sim_seconds": elapsed,
             "nodes": len(self._live()),
             "mesh": self.mesh_shape,
+            "buckets": self.tm.buckets,
             "events": list(self.events),
         }
         if self.tm.tokens_per_step and elapsed > 0:

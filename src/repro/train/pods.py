@@ -106,6 +106,14 @@ class PodTopology:
         """The intra-pod ring path of global node ``index``'s pod."""
         return self.path(index, "net")
 
+    def leader_of(self, pod: int, live: List[int]) -> Optional[int]:
+        """The pod's trunk leader: its lowest-indexed *live* node (so
+        leadership survives pod-local failures), or None when the pod
+        has no survivors. ``live`` is the global indices of live
+        nodes."""
+        members = [i for i in live if self.pod_of(i) == pod]
+        return min(members) if members else None
+
 
 def pod_fabric(pods: int, nodes_per_pod: int, *,
                trunk_bw: Optional[float] = None,

@@ -54,6 +54,33 @@ def _split_microbatches(batch: Dict[str, jax.Array], k: int):
     return jax.tree.map(split, batch)
 
 
+def split_by_shares(batch: Dict[str, jax.Array], shares) -> list:
+    """Split a global batch into contiguous per-node sub-batches of
+    ``shares[j]`` microbatches each (``sum(shares)`` microbatches
+    total, so the microbatch size is ``B // sum(shares)``). This is the
+    skew-aware batch assembly: a straggling node's share shrinks and
+    its sub-batch — hence its actual jax work — shrinks with it, while
+    the union of the sub-batches is exactly the original batch."""
+    shares = tuple(int(s) for s in shares)
+    if any(s < 1 for s in shares):
+        raise ValueError(f"every share must be >= 1, got {shares}")
+    m = sum(shares)
+    sizes = {x.shape[0] for x in jax.tree.leaves(batch)}
+    if len(sizes) != 1:
+        raise ValueError(f"batch dim 0 must agree across leaves: {sizes}")
+    b = sizes.pop()
+    if b % m:
+        raise ValueError(f"batch of {b} does not split into {m} "
+                         f"microbatches (shares {shares})")
+    mb = b // m
+    subs, off = [], 0
+    for s in shares:
+        lo, hi = off * mb, (off + s) * mb
+        subs.append(jax.tree.map(lambda x: x[lo:hi], batch))
+        off += s
+    return subs
+
+
 def make_train_step(cfg: ModelConfig, run: RunConfig, *,
                     impl: str = "auto",
                     mesh=None,
@@ -61,9 +88,16 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, *,
                     unroll: int = 1,
                     capacity_factor: float = 1.25,
                     loss_chunk: int = 512):
-    """Returns train_step(params, opt_state, batch, step) -> (params,
-    opt_state, metrics). jit-compiled by the caller (launch/train.py) so
-    in/out shardings can be attached there."""
+    """Returns train_step(params, opt_state, batch, step,
+    node_shares=None) -> (params, opt_state, metrics). jit-compiled by
+    the caller (launch/train.py) so in/out shardings can be attached
+    there. ``node_shares`` (optional, a tuple of per-node microbatch
+    counts — the straggler loop's rebalanced split routed into real
+    data) must be **static** under jit: pass
+    ``static_argnames=("node_shares",)``. Equal shares dispatch to the
+    unchanged plain path, so they are bit-identical to passing no
+    shares; skewed shares change each node's actual jax work (sub-batch
+    shapes, scan lengths) while preserving the same global mean."""
 
     def grads_of(params, batch):
         (loss, parts), grads = jax.value_and_grad(
@@ -74,26 +108,56 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, *,
             has_aux=True)(params)
         return loss, parts, grads
 
-    def accumulate(params, batch):
-        if run.microbatch and run.microbatch > 1:
-            mb = _split_microbatches(batch, run.microbatch)
+    def scan_sum(params, batch, k):
+        """Sum (not mean) of loss/parts/f32-grads over ``k`` microbatches."""
+        mb = _split_microbatches(batch, k)
 
-            def body(carry, b1):
-                loss_acc, parts_acc, g_acc = carry
-                loss, parts, g = grads_of(params, b1)
-                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                parts_acc = jax.tree.map(lambda a, b: a + b, parts_acc, parts)
-                return (loss_acc + loss, parts_acc, g_acc), None
+        def body(carry, b1):
+            loss_acc, parts_acc, g_acc = carry
+            loss, parts, g = grads_of(params, b1)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            parts_acc = jax.tree.map(lambda a, b: a + b, parts_acc, parts)
+            return (loss_acc + loss, parts_acc, g_acc), None
 
-            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            init = (jnp.zeros(()), {"ce": jnp.zeros(()), "aux": jnp.zeros(())}, zeros_g)
-            (loss, parts, grads), _ = jax.lax.scan(body, init, mb)
-            k = float(run.microbatch)
-            return loss / k, jax.tree.map(lambda x: x / k, parts), \
-                jax.tree.map(lambda g: g / k, grads)
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        init = (jnp.zeros(()), {"ce": jnp.zeros(()), "aux": jnp.zeros(())}, zeros_g)
+        (loss, parts, grads), _ = jax.lax.scan(body, init, mb)
+        return loss, parts, grads
+
+    def _mean(loss, parts, grads, k):
+        k = float(k)
+        return loss / k, jax.tree.map(lambda x: x / k, parts), \
+            jax.tree.map(lambda g: g / k, grads)
+
+    def accumulate(params, batch, node_shares=None):
+        # skew-aware batching: ``node_shares`` are per-node microbatch
+        # counts (static python ints — the straggler loop's
+        # rebalanced_shares routed into real data). A *skewed* split
+        # runs each node's contiguous sub-batch through its own
+        # accumulation scan — per-node jax work (shapes, scan lengths)
+        # actually changes — and combines the sums into the same global
+        # mean. An *equal* split falls through to the uniform scan so
+        # the computation is literally the plain-microbatch one: losses
+        # stay bit-identical when there is nothing to rebalance.
+        if node_shares is not None and len(node_shares) > 1 \
+                and len(set(node_shares)) > 1:
+            m = sum(node_shares)
+            tot = None
+            for s, sub in zip(node_shares, split_by_shares(batch, node_shares)):
+                r = scan_sum(params, sub, s)
+                tot = r if tot is None else (
+                    tot[0] + r[0],
+                    jax.tree.map(lambda a, b: a + b, tot[1], r[1]),
+                    jax.tree.map(lambda a, b: a + b, tot[2], r[2]))
+            return _mean(*tot, m)
+        # equal (or absent) shares: literally the plain path — nothing
+        # to rebalance, so the computation must be the unchanged one
+        k = run.microbatch or 1
+        if k > 1:
+            return _mean(*scan_sum(params, batch, k), k)
         return grads_of(params, batch)
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, node_shares=None):
         if run.pod_sync == "compressed" and mesh is not None and \
                 "pod" in mesh.shape and mesh.shape["pod"] > 1:
             from repro.parallel.sharding import rule_overrides
@@ -106,7 +170,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, *,
             def per_pod(params, batch):
                 batch = jax.tree.map(lambda x: x[0], batch)
                 with rule_overrides({"batch": "data", "decode_batch": "data"}):
-                    loss, parts, grads = accumulate(params, batch)
+                    loss, parts, grads = accumulate(params, batch,
+                                                    node_shares=node_shares)
                 grads = jax.tree.map(
                     lambda g: compressed_ring_all_reduce_inner(
                         g.astype(jnp.float32) / npod, "pod").astype(g.dtype),
@@ -125,7 +190,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, *,
                 axis_names={"pod"}, check_vma=False,
             )(params, batch_pod)
         else:
-            loss, parts, grads = accumulate(params, batch)
+            loss, parts, grads = accumulate(params, batch,
+                                            node_shares=node_shares)
 
         lr = lr_at(step, base_lr=run.learning_rate,
                    warmup_steps=run.warmup_steps, total_steps=run.total_steps)

@@ -54,19 +54,27 @@ def main() -> None:
             f"offered={scaled[0].trace.mean_rate:.1f}req_s")
 
     print("# event-loop capacity at O(1k) concurrent transfers")
-    fab = Fabric.of(*[Path(f"p{i}", 100.0) for i in range(8)],
-                    concurrency_discount=0.1)
-    rt = FabricRuntime(fab)
-    rng = np.random.default_rng(0)
-    ts = [rt.transfer(f"p{int(rng.integers(8))}",
-                      float(rng.uniform(1.0, 30.0)),
-                      flow=f"f{i % 13}", tenant=f"t{i % 5}")
-          for i in range(1500)]
-    ev0 = rt.clock.processed
-    t0 = time.monotonic()
-    rt.clock.run()
-    wall = time.monotonic() - t0
-    assert all(t.done for t in ts)
-    events = rt.clock.processed - ev0
-    row("scale/runtime_events_per_s", wall * 1e6,
-        f"events_per_s={events / wall:,.0f} events={events}")
+
+    def _event_loop_row(name: str, tracer=None) -> None:
+        fab = Fabric.of(*[Path(f"p{i}", 100.0) for i in range(8)],
+                        concurrency_discount=0.1)
+        rt = FabricRuntime(fab, tracer=tracer)
+        rng = np.random.default_rng(0)
+        ts = [rt.transfer(f"p{int(rng.integers(8))}",
+                          float(rng.uniform(1.0, 30.0)),
+                          flow=f"f{i % 13}", tenant=f"t{i % 5}")
+              for i in range(1500)]
+        ev0 = rt.clock.processed
+        t0 = time.monotonic()
+        rt.clock.run()
+        wall = time.monotonic() - t0
+        assert all(t.done for t in ts)
+        events = rt.clock.processed - ev0
+        row(name, wall * 1e6,
+            f"events_per_s={events / wall:,.0f} events={events}")
+
+    _event_loop_row("scale/runtime_events_per_s")
+    # same scenario through the tracing hook sites with tracing off —
+    # the ci.sh overhead gate holds this within 10% of the row above
+    from repro.obs.trace import NullTracer
+    _event_loop_row("scale/runtime_events_per_s_nulltracer", NullTracer())

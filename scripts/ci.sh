@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite, exactly as ROADMAP.md specifies,
 # plus the runtime/train/colocation/kvserve/offload/scale/simcore
-# benchmark sections with schema-validated JSON output (BENCH_9.json —
-# the PR-9 perf trajectory record), a trajectory check that the PR-8
-# headline rows recorded in the committed BENCH_8.json have not
+# benchmark sections with schema-validated JSON output (BENCH_10.json —
+# the PR-10 perf trajectory record), a trajectory check that the PR-9
+# headline rows recorded in the committed BENCH_9.json have not
 # regressed past tolerance, a simulator-speed floor (the event core
-# must stay >= 334 events/s on the fleet scenario), and the bucketed
-# DDP overlap-win floor: K=4 must beat single-shot allreduce by >= 20%
-# on the comm-bound headline config.
+# must stay >= 334 events/s on the fleet scenario), the bucketed DDP
+# overlap-win floor (K=4 must beat single-shot allreduce by >= 20% on
+# the comm-bound headline config), and the tracer-overhead gate: the
+# event loop with a NullTracer bound must stay within 10% of the
+# untraced row (the hook sites are a cached-bool branch; tracing off
+# must cost nothing).
 #   scripts/ci.sh            # tests + runtime,...,offload,scale,simcore
 #   scripts/ci.sh --bench    # also run the full benchmark driver
 set -euo pipefail
@@ -15,14 +18,14 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-PYTHONPATH=src:. python benchmarks/run.py --json BENCH_9.json \
+PYTHONPATH=src:. python benchmarks/run.py --json BENCH_10.json \
     --only runtime,train,colocation,kvserve,offload,scale,simcore
 
 # fail on schema-invalid benchmark output
 PYTHONPATH=src python - <<'EOF'
 import json, numbers, sys
 
-with open("BENCH_9.json") as f:
+with open("BENCH_10.json") as f:
     doc = json.load(f)
 problems = []
 if not isinstance(doc, dict) or set(doc) != {"rows", "failures"}:
@@ -64,6 +67,7 @@ else:
                      "scale/attainment_static",
                      "scale/attainment_autoscaled",
                      "scale/runtime_events_per_s",
+                     "scale/runtime_events_per_s_nulltracer",
                      "simcore/transfers_1000",
                      "simcore/transfers_10000",
                      "simcore/incremental_vs_global",
@@ -72,24 +76,26 @@ else:
         if required not in names:
             problems.append(f"required row {required!r} missing")
 if problems:
-    sys.exit("BENCH_9.json schema-invalid:\n  " + "\n  ".join(problems))
-print(f"BENCH_9.json OK ({len(doc['rows'])} rows)")
+    sys.exit("BENCH_10.json schema-invalid:\n  " + "\n  ".join(problems))
+print(f"BENCH_10.json OK ({len(doc['rows'])} rows)")
 EOF
 
-# trajectory check: PR-8 headline rows must stay within tolerance of
-# the committed BENCH_8.json, the offload winner must still be
+# trajectory check: PR-9 headline rows must stay within tolerance of
+# the committed BENCH_9.json, the offload winner must still be
 # soc-compress, the event core must not regress below the 334 events/s
-# floor on the fleet scenario, and bucketed DDP overlap (K=4) must
-# keep >= 20% win over single-shot allreduce.  (Deterministic
-# simulated timings, so 25% is generous — it only catches genuine
-# model changes, not jitter.  The events/s floor is wall-clock, set
-# ~10x below the post-rework speed so machine noise can't trip it.)
+# floor on the fleet scenario, bucketed DDP overlap (K=4) must keep
+# >= 20% win over single-shot allreduce, and the NullTracer event loop
+# must stay within 10% of the untraced one.  (Deterministic simulated
+# timings, so 25% is generous — it only catches genuine model changes,
+# not jitter.  The events/s floor is wall-clock, set ~10x below the
+# post-rework speed so machine noise can't trip it.)
 PYTHONPATH=src python - <<'EOF'
 import json, re, sys
 
 TOL = 0.25
 EVENTS_PER_S_FLOOR = 334.0  # BENCH_7's scale/runtime_events_per_s
 OVERLAP_WIN_FLOOR = 20.0    # % win of train/bucketed_k4 over k1
+TRACER_OVERHEAD = 0.10      # NullTracer ev/s within 10% of untraced
 HEADLINES = ("runtime/overlapped_pair", "colocation/serve_managed_p99",
              "offload/ckpt_soc_compress_busy", "offload/ckpt_host_compress_busy")
 
@@ -97,14 +103,14 @@ def by_name(path):
     with open(path) as f:
         return {r["name"]: r for r in json.load(f)["rows"]}
 
-old, new = by_name("BENCH_8.json"), by_name("BENCH_9.json")
+old, new = by_name("BENCH_9.json"), by_name("BENCH_10.json")
 problems = []
 for name in HEADLINES:
     if name not in old:
-        problems.append(f"baseline BENCH_8.json missing {name!r}")
+        problems.append(f"baseline BENCH_9.json missing {name!r}")
         continue
     if name not in new:
-        problems.append(f"BENCH_9.json missing {name!r}")
+        problems.append(f"BENCH_10.json missing {name!r}")
         continue
     o, n = old[name]["us"], new[name]["us"]
     drift = abs(n - o) / o
@@ -118,19 +124,33 @@ host = new.get("offload/ckpt_host_compress_busy", {}).get("us")
 if soc is not None and host is not None and soc >= host:
     problems.append(f"offload winner flipped: soc-compress {soc:,.1f}us "
                     f">= host-compress {host:,.1f}us")
-evrow = new.get("scale/runtime_events_per_s", {})
-m = re.search(r"events_per_s=([\d,]+)", evrow.get("derived", ""))
-if m is None:
-    problems.append("scale/runtime_events_per_s has no events_per_s= "
-                    f"in derived: {evrow.get('derived')!r}")
-else:
-    ev_s = float(m.group(1).replace(",", ""))
+
+def events_per_s(name):
+    evrow = new.get(name, {})
+    m = re.search(r"events_per_s=([\d,]+)", evrow.get("derived", ""))
+    if m is None:
+        problems.append(f"{name} has no events_per_s= in derived: "
+                        f"{evrow.get('derived')!r}")
+        return None
+    return float(m.group(1).replace(",", ""))
+
+ev_s = events_per_s("scale/runtime_events_per_s")
+if ev_s is not None:
     status = "FAIL" if ev_s < EVENTS_PER_S_FLOOR else "ok"
     print(f"  scale/runtime_events_per_s: {ev_s:,.0f} ev/s "
           f"(floor {EVENTS_PER_S_FLOOR:,.0f}) {status}")
     if ev_s < EVENTS_PER_S_FLOOR:
         problems.append(f"event core regressed: {ev_s:,.0f} events/s "
                         f"< floor {EVENTS_PER_S_FLOOR:,.0f}")
+nt_s = events_per_s("scale/runtime_events_per_s_nulltracer")
+if ev_s is not None and nt_s is not None:
+    floor = (1.0 - TRACER_OVERHEAD) * ev_s
+    status = "FAIL" if nt_s < floor else "ok"
+    print(f"  scale/runtime_events_per_s_nulltracer: {nt_s:,.0f} ev/s "
+          f"(>= {floor:,.0f}, 90% of untraced) {status}")
+    if nt_s < floor:
+        problems.append(f"tracing-off overhead: NullTracer {nt_s:,.0f} ev/s "
+                        f"< {floor:,.0f} (90% of untraced {ev_s:,.0f})")
 k4 = new.get("train/bucketed_k4", {})
 m = re.search(r"win=([\d.]+)%", k4.get("derived", ""))
 if m is None:
@@ -145,11 +165,12 @@ else:
         problems.append(f"bucketed overlap win {win:.1f}% "
                         f"< floor {OVERLAP_WIN_FLOOR:.0f}%")
 if problems:
-    sys.exit("BENCH_8 -> BENCH_9 trajectory check failed:\n  "
+    sys.exit("BENCH_9 -> BENCH_10 trajectory check failed:\n  "
              + "\n  ".join(problems))
-print("trajectory check OK (PR-8 headline rows within "
+print("trajectory check OK (PR-9 headline rows within "
       f"{TOL:.0%}, offload winner still soc-compress, event core above "
-      f"{EVENTS_PER_S_FLOOR:,.0f} ev/s, bucketed overlap win above "
+      f"{EVENTS_PER_S_FLOOR:,.0f} ev/s, NullTracer within "
+      f"{TRACER_OVERHEAD:.0%} of untraced, bucketed overlap win above "
       f"{OVERLAP_WIN_FLOOR:.0f}%)")
 EOF
 

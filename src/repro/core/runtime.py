@@ -85,6 +85,7 @@ from typing import (Any, Callable, Dict, Generator, List, Optional, Tuple)
 
 from repro.core.fabric import (BudgetLedger, Fabric, FabricError, IN, OUT,
                                OPS_PER_S)
+from repro.obs.trace import NULL_TRACER
 
 #: relative tolerance for "this rebalance did not change your rate":
 #: recomputing an untouched bucket reproduces its shares only up to the
@@ -317,6 +318,8 @@ class Process:
         self.result: Any = None
         self._waiting: Any = None           # what the process is blocked on
         self._waiters: List[Callable[[Any], None]] = []
+        if runtime._trace:
+            runtime.tracer.on_process_start(self, runtime.clock.now)
         runtime.clock.schedule(0.0, self._advance, None)
 
     def kill(self) -> None:
@@ -331,6 +334,8 @@ class Process:
         if isinstance(waiting, Transfer) and not waiting.done:
             self.runtime.cancel(waiting)
         self.gen.close()
+        if self.runtime._trace:
+            self.runtime.tracer.on_process_end(self, self.runtime.clock.now)
         waiters, self._waiters = self._waiters, []
         for w in waiters:
             self.runtime.clock.schedule(0.0, w, None)
@@ -344,6 +349,9 @@ class Process:
         except StopIteration as e:
             self.done = True
             self.result = e.value
+            if self.runtime._trace:
+                self.runtime.tracer.on_process_end(
+                    self, self.runtime.clock.now)
             waiters, self._waiters = self._waiters, []
             for w in waiters:
                 self.runtime.clock.schedule(0.0, w, self.result)
@@ -427,6 +435,9 @@ class Barrier:
     def _release(self) -> None:
         self._count = 0
         self.generation += 1
+        rt = self.runtime
+        if rt._trace:
+            rt.tracer.on_barrier_release(self, rt.clock.now)
         if self._on_release is not None:
             self._on_release(self.generation)
         sig, self._signal = self._signal, self.runtime.signal()
@@ -458,11 +469,17 @@ class FabricRuntime:
     (path, direction) bucket; ``"global"`` recomputes every bucket of
     the mutated group on every mutation — the old behavior, kept as a
     bit-identical debug oracle (see the module docstring).
+
+    ``tracer`` is an optional ``obs.trace.Tracer``: when attached, the
+    runtime emits typed spans at transfer begin / rate change /
+    complete / cancel, at ``Barrier`` release, and around ``Process``
+    lifetimes (see src/repro/obs/). The default is the no-op
+    ``NULL_TRACER`` and the hook sites are guarded on a cached bool.
     """
 
     def __init__(self, fabric: Fabric, *, clock: Optional[SimClock] = None,
                  ledger: Optional[BudgetLedger] = None, qos=None,
-                 rebalance: str = "incremental"):
+                 rebalance: str = "incremental", tracer=None):
         if rebalance not in ("incremental", "global"):
             raise ValueError(
                 f"rebalance must be 'incremental' or 'global', got "
@@ -472,6 +489,16 @@ class FabricRuntime:
         self.ledger = ledger if ledger is not None else fabric.ledger()
         self.qos = qos
         self.rebalance_mode = rebalance
+        # observability: hook sites below fire only when a real (enabled)
+        # tracer is attached — _trace caches the flag so the hot path
+        # pays one attribute load + branch with tracing off (the
+        # scale/runtime_events_per_s floor is gated on this in ci.sh).
+        # Tracing is record-only: hooks never touch clock/ledger state,
+        # so traced runs are bit-identical to untraced ones.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._trace = bool(self.tracer.enabled)
+        if self._trace:
+            self.tracer._attach(self)
         # group -> (path, direction) -> insertion-ordered set of active
         # (capacity-holding) transfers: the bucket index. Dict-as-set
         # gives O(1) add/remove/contains with deterministic order.
@@ -621,6 +648,8 @@ class FabricRuntime:
         t.finished_at = now
         self.clock.cancel(t._event)
         t._event = None
+        if self._trace:
+            self.tracer.on_transfer_end(t)
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
@@ -704,6 +733,8 @@ class FabricRuntime:
         self._buckets.setdefault(group, {}).setdefault(key, {})[t] = None
         mf = self._member_flows.setdefault(group, {})
         mf[t.flow] = mf.get(t.flow, 0) + 1
+        if self._trace:
+            self.tracer.on_transfer_start(t)
         self._queue_rebalance(group, key)
 
     def _complete(self, t: Transfer) -> None:
@@ -718,6 +749,8 @@ class FabricRuntime:
         t._event = None
         self._release(t)
         self._drop_member(group, key, t)
+        if self._trace:
+            self.tracer.on_transfer_end(t)
         callbacks, t._callbacks = t._callbacks, []
         for fn in callbacks:
             fn(t)
@@ -873,6 +906,8 @@ class FabricRuntime:
                 deltas[t.flow] = deltas.get(t.flow, 0.0) + (r - t._res)
                 t._res = r
             t.rate = r
+            if self._trace:
+                self.tracer.on_transfer_rate(t, now, r)
             clock.cancel(t._event)
             if t.remaining <= 1e-12:
                 t._event = clock.schedule(0.0, self._complete, t)

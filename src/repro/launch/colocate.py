@@ -110,6 +110,12 @@ def main(argv=None):
     ap.add_argument("--compute-s", type=float, default=0.3)
     ap.add_argument("--tokens-per-step", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="write the managed run's span timeline (or the "
+                         "unmanaged run's, with --mode unmanaged) as "
+                         "Chrome-trace JSON + print the attribution "
+                         "summary (load in chrome://tracing or "
+                         "ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     fabric, make_engine, make_cluster, requests = build_pieces(args)
@@ -135,9 +141,15 @@ def main(argv=None):
               f"train {rep.train['tokens_per_s']:,.0f} tokens/s "
               f"({keep:.1%} of solo) | throttles={rep.throttles}")
 
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+
     if args.mode in ("all", "unmanaged"):
         rep = Colocation(fabric=fabric(), make_engine=make_engine,
                          make_cluster=make_cluster,
+                         tracer=tracer if args.mode == "unmanaged" else None,
                          ).run(requests(), args.train_steps)
         out["unmanaged"] = rep
         show("unmanaged", rep)
@@ -149,6 +161,7 @@ def main(argv=None):
             admission=AdmissionConfig(
                 slo_ttft=slo, occupancy_limit=args.occupancy_limit,
                 watch_paths=watch if args.occupancy_limit else ()),
+            tracer=tracer,
             ).run(requests(), args.train_steps)
         out["managed"] = rep
         show("managed", rep)
@@ -159,6 +172,13 @@ def main(argv=None):
             if e["event"] in ("throttle", "resume"):
                 print(f"[admission] t={e['t']:.3f}s {e['event']} "
                       f"({e.get('reason', '')})")
+
+    if tracer is not None:
+        from repro.obs.export import dump, summary
+        dump(tracer, args.trace)
+        print(f"[trace] {len(tracer.spans)} spans -> {args.trace} "
+              "(load in chrome://tracing or ui.perfetto.dev)")
+        print(summary(tracer))
     return out
 
 

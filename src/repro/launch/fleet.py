@@ -24,7 +24,7 @@ import dataclasses
 from repro.scale import AutoscaleConfig, ServeFleet, headline_specs
 
 
-def _build(args) -> ServeFleet:
+def _build(args, tracer=None) -> ServeFleet:
     cfg = AutoscaleConfig(max_replicas=args.max_replicas)
     specs = headline_specs(duration=args.duration, autoscale=cfg)
     if args.premium_rate or args.standard_rate:
@@ -36,7 +36,7 @@ def _build(args) -> ServeFleet:
                  for s in specs]
     return ServeFleet(specs, host_bw=args.host_bw,
                       replica_bw=args.replica_bw, replicas=args.replicas,
-                      arbitration=args.arbitration)
+                      arbitration=args.arbitration, tracer=tracer)
 
 
 def _show(tag: str, rep) -> None:
@@ -78,17 +78,31 @@ def main(argv=None):
                     help="K-tenant admission arbitration (priority-ordered "
                          "intake pause/resume)")
     ap.add_argument("--max-sim-seconds", type=float, default=2000.0)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="write the autoscaled run's span timeline (or the "
+                         "static run's, with --mode static) as Chrome-trace "
+                         "JSON")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
 
     out = {}
     if args.mode in ("both", "static"):
-        out["static"] = _build(args).run(
+        out["static"] = _build(
+            args, tracer=tracer if args.mode == "static" else None).run(
             autoscale=False, max_sim_seconds=args.max_sim_seconds)
         _show("static    ", out["static"])
     if args.mode in ("both", "autoscaled"):
-        out["autoscaled"] = _build(args).run(
+        out["autoscaled"] = _build(args, tracer=tracer).run(
             autoscale=True, max_sim_seconds=args.max_sim_seconds)
         _show("autoscaled", out["autoscaled"])
+    if tracer is not None:
+        from repro.obs.export import dump
+        dump(tracer, args.trace)
+        print(f"[trace] {len(tracer.spans)} spans -> {args.trace}")
     if len(out) == 2:
         s = out["static"].attainment("premium")
         a = out["autoscaled"].attainment("premium")

@@ -55,9 +55,15 @@ def main(argv=None):
                     help="trace length in simulated seconds")
     ap.add_argument("--trace-seed", type=int, default=0,
                     help="arrival-generator seed (deterministic replay)")
+    ap.add_argument("--trace-json", default="", metavar="OUT.json",
+                    help="write the staged run's span timeline as "
+                         "Chrome-trace JSON (requires --staged; distinct "
+                         "from --trace, which replays an arrival trace)")
     args = ap.parse_args(argv)
     if args.trace and not args.staged:
         ap.error("--trace requires --staged")
+    if args.trace_json and not args.staged:
+        ap.error("--trace-json requires --staged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -65,10 +71,14 @@ def main(argv=None):
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
     from repro.serve.disagg import kv_fabric, kv_serve_time_model
     if args.staged:
+        tracer = None
+        if args.trace_json:
+            from repro.obs.trace import Tracer
+            tracer = Tracer()
         eng = StagedServeEngine(cfg, params, slots=args.slots,
                                 max_len=args.max_len, fabric=kv_fabric(),
                                 time_model=kv_serve_time_model(),
-                                plan_placement=True)
+                                plan_placement=True, tracer=tracer)
     else:
         fabric = kv_fabric() if args.kv_fabric else None
         eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
@@ -135,6 +145,11 @@ def main(argv=None):
         print(f"[serve] simulated TTFT p50={p50 * 1e3:.3f}ms "
               f"p99={p99 * 1e3:.3f}ms makespan="
               f"{eng.clock.now * 1e3:.3f}ms placements={eng.placements}")
+        if args.trace_json:
+            from repro.obs.export import dump
+            dump(eng.runtime.tracer, args.trace_json)
+            print(f"[trace] {len(eng.runtime.tracer.spans)} spans -> "
+                  f"{args.trace_json}")
     for r in reqs[:4]:
         print(f"  req{r.rid}: {r.out_tokens[:10]}{'...' if len(r.out_tokens) > 10 else ''}")
     assert all(r.done for r in reqs)

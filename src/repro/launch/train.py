@@ -99,7 +99,8 @@ def simulate(cfg, shape, args):
 
     tm = ClusterTimeModel.from_config(cfg, shape, nodes=nodes,
                                       ckpt_path=args.ckpt_staging,
-                                      buckets=args.buckets)
+                                      buckets=args.buckets,
+                                      weighted_buckets=args.weighted_buckets)
 
     def fresh_fabric():
         if args.pods > 1:
@@ -122,8 +123,8 @@ def simulate(cfg, shape, args):
     if args.buckets > 1:
         # single-shot reference on an identical fresh fabric: the
         # overlap win is reported as measured, not predicted
-        ref = make(dataclasses.replace(tm, buckets=1), fresh_fabric()) \
-            .run(args.steps)
+        ref = make(dataclasses.replace(tm, buckets=1, bucket_weights=None),
+                   fresh_fabric()).run(args.steps)
     cluster = make(tm, fabric)
     summary = cluster.run(args.steps)
     pods_msg = (f" pods={topo.pods}x{topo.nodes_per_pod} "
@@ -146,15 +147,18 @@ def simulate(cfg, shape, args):
         win = 100.0 * (1.0 - tk / t1) if t1 > 0 else 0.0
         print(f"[simulate] buckets={tm.buckets}: {tk * 1e3:.1f}ms/step vs "
               f"{t1 * 1e3:.1f}ms single-shot -> overlap win {win:.1f}%")
-        s0 = min((r["step"] for r in cluster.bucket_timeline), default=0)
-        first = [r for r in cluster.bucket_timeline if r["step"] == s0]
-        for r in sorted(first, key=lambda r: r["bucket"]):
-            issue = r["t_issue"]
-            span = "" if issue is None else \
-                f" issued t={issue * 1e3:.1f}ms, in flight " \
-                f"{(r['t_done'] - issue) * 1e3:.1f}ms"
-            print(f"[simulate]   bucket {r['bucket']}: closed "
-                  f"t={r['t_done'] * 1e3:.1f}ms{span}")
+        # first step's overlap timeline, straight off the tracer's
+        # bucket phase spans (the cluster's own runtime traces them)
+        from repro.obs.trace import PHASE
+        spans = [s for s in cluster.runtime.tracer.spans
+                 if s.kind == PHASE and s.name == "bucket"
+                 and not s.meta.get("aborted")]
+        s0 = min((s.meta["step"] for s in spans), default=0)
+        for s in sorted((s for s in spans if s.meta["step"] == s0),
+                        key=lambda s: s.meta["bucket"]):
+            print(f"[simulate]   bucket {s.meta['bucket']}: closed "
+                  f"t={s.t_end * 1e3:.1f}ms issued t={s.t_start * 1e3:.1f}ms,"
+                  f" in flight {(s.t_end - s.t_start) * 1e3:.1f}ms")
     if topo is not None:
         from repro.core.fabric import OUT
         left = cluster.runtime.ledger.reserved(topo.trunk, OUT)
@@ -166,6 +170,11 @@ def simulate(cfg, shape, args):
               f"{off['compression_operations_offloaded']} saves compressed "
               f"off-host, cycles_saved={off['cpu_cycles_saved']:.3g}, "
               f"ratio={off['compression_ratio']:.2f}")
+    if args.trace:
+        from repro.obs.export import dump
+        dump(cluster.runtime.tracer, args.trace)
+        print(f"[simulate] wrote Chrome trace "
+              f"({len(cluster.runtime.tracer.spans)} spans) to {args.trace}")
     return cluster
 
 
@@ -203,6 +212,15 @@ def main(argv=None):
                          "(bucketed-DDP overlap; K>1 also runs a "
                          "single-shot reference and prints the "
                          "measured overlap win)")
+    ap.add_argument("--weighted-buckets", action="store_true",
+                    help="--simulate --buckets K: size each gradient "
+                         "bucket from the model's real per-layer-group "
+                         "parameter counts instead of splitting "
+                         "uniformly (train/cluster.layer_group_weights)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="--simulate: write the run's span timeline as "
+                         "Chrome-trace JSON (load in chrome://tracing "
+                         "or ui.perfetto.dev)")
     ap.add_argument("--fabric", default="v5e",
                     help="named fabric for --simulate "
                          "(v5e | weak-soc | fast-net | linefs)")

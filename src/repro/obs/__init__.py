@@ -1,0 +1,20 @@
+"""Observability subsystem: tracing, metrics, and trace export.
+
+One shared attribution substrate for every tenant on the
+``FabricRuntime`` — see ``obs.trace`` (typed spans from runtime
+hooks), ``obs.metrics`` (counters/gauges/histograms + ledger-sampled
+occupancy series), and ``obs.export`` (Chrome-trace JSON + text
+summaries).
+"""
+from repro.obs.export import chrome_trace, dump, summary, validate_chrome_trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               OccupancyTimeSeries)
+from repro.obs.trace import (BARRIER, COMPUTE, NULL_TRACER, PHASE, PROCESS,
+                             TRANSFER, NullTracer, Span, Tracer)
+
+__all__ = [
+    "BARRIER", "COMPUTE", "NULL_TRACER", "PHASE", "PROCESS", "TRANSFER",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "OccupancyTimeSeries", "NullTracer", "Span", "Tracer",
+    "chrome_trace", "dump", "summary", "validate_chrome_trace",
+]

@@ -10,7 +10,9 @@ staging bytes fight the gradient traffic for the PCIe group and its
 ops fight other programs for the device — nothing is a free lunch.
 
 ``OffloadStats`` is the host-cycles-saved / offload-hit accounting in
-the idiom of SNIPPETS.md's smartnic_offload.py: a counters dict plus a
+the idiom of SNIPPETS.md's smartnic_offload.py — since PR 10 backed by
+an ``obs.metrics.MetricsRegistry`` (one ``Counter`` per field) with the
+same public surface: a ``counters`` dict view plus a
 ``get_performance_stats()`` snapshot with the derived ratios.
 """
 from __future__ import annotations
@@ -20,6 +22,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.fabric import IN, OUT
 from repro.core.runtime import FabricRuntime, Process
+from repro.obs.metrics import MetricsRegistry
 
 #: default QoS tag for offload-tier traffic (tenancy/qos registers it)
 OFFLOAD = "offload"
@@ -32,46 +35,57 @@ class OffloadStats:
     ``cpu_cycles_saved`` counts host ops avoided 1:1 with the ops
     executed off-host (byte-granular work: one op per byte, so this is
     also "host bytes not touched"); ``packets_offloaded`` counts results
-    filtered out on the SoC that never crossed the host wire."""
+    filtered out on the SoC that never crossed the host wire.
 
-    def __init__(self):
-        self.counters: Dict[str, float] = {
-            "cpu_cycles_saved": 0.0,
-            "compression_operations_offloaded": 0,
-            "compression_bytes_in": 0,
-            "compression_bytes_out": 0,
-            "packets_offloaded": 0,
-            "packets_total": 0,
-            "programs_run": 0,
-            "ops_executed": 0.0,
-        }
+    The fields live as ``Counter`` metrics in a ``MetricsRegistry``
+    (pass one to share a registry across consumers); ``counters``
+    remains the dict-shaped snapshot the pre-obs implementation
+    exposed."""
+
+    _FIELDS = ("cpu_cycles_saved", "compression_operations_offloaded",
+               "compression_bytes_in", "compression_bytes_out",
+               "packets_offloaded", "packets_total", "programs_run",
+               "ops_executed")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        for name in self._FIELDS:
+            self.metrics.counter(name)
+        # cycles/ops accumulate fractional op counts; start them float
+        self.metrics.counter("cpu_cycles_saved").value = 0.0
+        self.metrics.counter("ops_executed").value = 0.0
+
+    @property
+    def counters(self) -> Dict[str, float]:
+        return {name: self.metrics.counter(name).value
+                for name in self._FIELDS}
 
     # -- recording ------------------------------------------------------
     def record_program(self, ops: float) -> None:
-        self.counters["programs_run"] += 1
-        self.counters["ops_executed"] += ops
+        self.metrics.counter("programs_run").inc(1)
+        self.metrics.counter("ops_executed").inc(ops)
 
     def record_compression(self, bytes_in: int, bytes_out: int, *,
                            ops: Optional[float] = None,
                            offloaded: bool = True) -> None:
         """One codec run. ``offloaded=False`` records a host-side run
         for the comparison denominators without crediting savings."""
-        self.counters["compression_bytes_in"] += bytes_in
-        self.counters["compression_bytes_out"] += bytes_out
+        self.metrics.counter("compression_bytes_in").inc(bytes_in)
+        self.metrics.counter("compression_bytes_out").inc(bytes_out)
         if offloaded:
-            self.counters["compression_operations_offloaded"] += 1
-            self.counters["cpu_cycles_saved"] += \
-                ops if ops is not None else float(bytes_in)
+            self.metrics.counter("compression_operations_offloaded").inc(1)
+            self.metrics.counter("cpu_cycles_saved").inc(
+                ops if ops is not None else float(bytes_in))
 
     def record_filter(self, scanned: int, matched: int, *,
                       ops: Optional[float] = None) -> None:
         """One SoC-side filter pass: ``scanned`` candidates examined on
         the SoC, ``matched`` survivors forwarded to the host — the
         difference never crossed the wire."""
-        self.counters["packets_total"] += scanned
-        self.counters["packets_offloaded"] += scanned - matched
-        self.counters["cpu_cycles_saved"] += \
-            ops if ops is not None else float(scanned)
+        self.metrics.counter("packets_total").inc(scanned)
+        self.metrics.counter("packets_offloaded").inc(scanned - matched)
+        self.metrics.counter("cpu_cycles_saved").inc(
+            ops if ops is not None else float(scanned))
 
     # -- reporting ------------------------------------------------------
     def get_performance_stats(self) -> Dict[str, float]:
@@ -129,6 +143,10 @@ class OffloadProgram:
     def _body(self, compute, ops, in_path, in_bytes, out_path, out_bytes,
               in_direction, out_direction, max_rate, flow):
         rt = self.runtime
+        span = rt.tracer.begin_phase(f"offload:{self.name}",
+                                     tenant=self.tenant, flow=flow,
+                                     compute=compute, ops=ops) \
+            if rt._trace else None
         if in_path is not None and in_bytes > 0:
             yield rt.transfer(in_path, in_bytes, direction=in_direction,
                               flow=f"{flow}:in", tenant=self.tenant)
@@ -139,4 +157,6 @@ class OffloadProgram:
             yield rt.transfer(out_path, out_bytes, direction=out_direction,
                               flow=f"{flow}:out", tenant=self.tenant)
         self.stats.record_program(ops)
+        if span is not None:
+            rt.tracer.end_phase(span)
         return rt.clock.now

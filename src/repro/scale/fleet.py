@@ -147,7 +147,8 @@ class ServeFleet:
                  arbitration: bool = False,
                  arbitration_check_every: float = 0.05,
                  sample_every: float = 0.05,
-                 vocab: int = 32000):
+                 vocab: int = 32000,
+                 tracer=None):
         if not specs:
             raise ValueError("ServeFleet needs at least one tenant spec")
         names = [s.name for s in specs]
@@ -160,7 +161,7 @@ class ServeFleet:
             raise ValueError("fleet fabric must provide a 'fleet:host' path")
         self.replica_paths = replica_paths_of(self.fabric)
         qos = QoSPolicy.fleet([s.tenant() for s in self.specs])
-        self.runtime = FabricRuntime(self.fabric, qos=qos)
+        self.runtime = FabricRuntime(self.fabric, qos=qos, tracer=tracer)
         tm = ServeTimeModel(
             prefill_path="fleet:host", decode_path="fleet:host",
             prefill_units_per_token=prefill_units_per_token,

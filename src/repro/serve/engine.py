@@ -574,7 +574,8 @@ class StagedServeEngine(_EngineCore):
                  max_inflight_prefills: int = 2,
                  tenant: Optional[str] = None,
                  compute: str = "jax",
-                 decode_pool: bool = False):
+                 decode_pool: bool = False,
+                 tracer=None):
         super().__init__(cfg, params, slots=slots, max_len=max_len, impl=impl,
                          cache_dtype=cache_dtype, seed=seed,
                          bucket_prefill=bucket_prefill, compute=compute)
@@ -582,7 +583,10 @@ class StagedServeEngine(_EngineCore):
         if runtime is None:
             if fabric is None:
                 raise ValueError("StagedServeEngine needs a fabric or runtime")
-            runtime = FabricRuntime(fabric)
+            runtime = FabricRuntime(fabric, tracer=tracer)
+        elif tracer is not None:
+            raise ValueError("pass the tracer to the shared runtime, "
+                             "not to the engine")
         if time_model is None:
             raise ValueError("StagedServeEngine needs a ServeTimeModel")
         self.runtime, self.tm = runtime, time_model

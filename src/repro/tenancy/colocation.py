@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core import hw
 from repro.core.fabric import Fabric, OUT, Path, merge_fabrics
 from repro.core.runtime import FabricRuntime
+from repro.obs.metrics import OccupancyTimeSeries
 from repro.serve.engine import Request, ServeTimeModel, StagedServeEngine
 from repro.tenancy.admission import (AdmissionConfig, AdmissionController,
                                      percentile)
@@ -141,39 +142,15 @@ def serve_metrics(requests: Sequence[Request], elapsed: float) -> Dict[str, floa
     }
 
 
-class _OccupancySampler:
-    """Periodic attribution of ledger-held *outbound* rate to tenants:
-    every tick, each active OUT transfer's current reservation is
-    charged to its tenant as ``rate * dt`` path-units, normalized at
-    the end to an average fraction of the path's outbound capacity.
+class _OccupancySampler(OccupancyTimeSeries):
+    """Periodic attribution of ledger-held *outbound* rate to tenants —
+    since PR 10 a thin alias over ``obs.metrics.OccupancyTimeSeries``
+    (OUT-only, same charge rule, same ``busy``/``finish()`` surface).
     (IN traffic draws on the opposite direction budget — mixing the two
     against one capacity would double-count a bidirectional path.)"""
 
     def __init__(self, runtime: FabricRuntime, every: float):
-        self.runtime = runtime
-        self.every = every
-        self.busy: Dict[str, Dict[str, float]] = {}
-        self._t0 = runtime.clock.now
-        self._proc = runtime.every(every, self._sample, start_delay=every,
-                                   name="occupancy-sampler")
-
-    def _sample(self) -> None:
-        for t in self.runtime.active_transfers():
-            if t._res <= 0 or t.direction != OUT:
-                continue
-            per_tenant = self.busy.setdefault(t.path, {})
-            tag = t.tenant if t.tenant is not None else "untagged"
-            per_tenant[tag] = per_tenant.get(tag, 0.0) + t._res * self.every
-
-    def finish(self) -> Dict[str, Dict[str, float]]:
-        self._proc.kill()
-        elapsed = self.runtime.clock.now - self._t0
-        if elapsed <= 0:
-            return {}
-        return {
-            path: {tenant: units / (self.runtime.fabric[path].capacity * elapsed)
-                   for tenant, units in per_tenant.items()}
-            for path, per_tenant in self.busy.items()}
+        super().__init__(runtime, every, directions=(OUT,))
 
 
 # ----------------------------------------------------------------------
@@ -197,8 +174,8 @@ class Colocation:
                  make_cluster: Callable[[FabricRuntime], TrainCluster],
                  qos: Optional[QoSPolicy] = None,
                  admission: Optional[AdmissionConfig] = None,
-                 sample_every: float = 0.01):
-        self.runtime = FabricRuntime(fabric, qos=qos)
+                 sample_every: float = 0.01, tracer=None):
+        self.runtime = FabricRuntime(fabric, qos=qos, tracer=tracer)
         self.engine = make_engine(self.runtime)
         self.cluster = make_cluster(self.runtime)
         if self.engine.runtime is not self.runtime \

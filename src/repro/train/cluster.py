@@ -71,6 +71,7 @@ from repro.ckpt.checkpoint import CheckpointManager, StagingOption
 from repro.ft.elastic import best_mesh_for
 from repro.ft.manager import FaultToleranceManager
 from repro.ft.straggler import StragglerDetector
+from repro.obs.trace import PHASE, Span, Tracer
 from repro.offload.compression import CKPT_RATIO
 from repro.offload.device import node_compute_paths
 from repro.offload.program import OffloadStats
@@ -161,6 +162,34 @@ def _exact_split(total: float, weights: List[float],
     return parts
 
 
+def layer_group_weights(cfg, k: int) -> List[float]:
+    """Per-bucket gradient-size weights from the *real* parameter tree:
+    the model's tensors (configs.base._param_tree_sizes) are grouped
+    into ``k`` contiguous layer groups — layer ``i`` lands in group
+    ``i * k // num_layers`` — with the embedding riding the first group
+    and the head/final norm the last (they produce their gradients at
+    the edges of backward). The weights are plain parameter counts, so
+    a ``bucket_plan(weights=...)`` split reflects where the bytes
+    actually are: an embedding-heavy small model front-loads bucket 0,
+    a deep uniform model degenerates to the uniform split."""
+    from repro.configs.base import _param_tree_sizes
+    num_layers = cfg.num_layers
+    if not 1 <= k <= num_layers:
+        raise ValueError(f"need 1 <= buckets <= num_layers ({num_layers}), "
+                         f"got {k}")
+    weights = [0.0] * k
+    for name, size in _param_tree_sizes(cfg).items():
+        if name.startswith("layer"):
+            layer = int(name.split(".", 1)[0][len("layer"):])
+            group = layer * k // num_layers
+        elif name == "embed.table":
+            group = 0
+        else:                       # lm_head, final_norm, ...
+            group = k - 1
+        weights[group] += float(size)
+    return weights
+
+
 @dataclass(frozen=True)
 class ClusterTimeModel:
     """Per-step cost model for one simulated node."""
@@ -186,6 +215,11 @@ class ClusterTimeModel:
     #                                  allreduce as soon as its slice of
     #                                  backward completes (classic DDP
     #                                  overlap); 1 = single-shot
+    bucket_weights: Optional[Tuple[float, ...]] = None
+    #                                  per-bucket cost weights (one per
+    #                                  bucket, e.g. layer_group_weights
+    #                                  from the real param tree); None =
+    #                                  uniform
 
     def __post_init__(self):
         if self.ckpt_path not in _CKPT_MODES:
@@ -203,6 +237,14 @@ class ClusterTimeModel:
         if self.buckets < 1 or self.buckets != int(self.buckets):
             raise ValueError(f"buckets must be a positive int, "
                              f"got {self.buckets}")
+        if self.bucket_weights is not None:
+            object.__setattr__(self, "bucket_weights",
+                               tuple(self.bucket_weights))
+            if len(self.bucket_weights) != self.buckets \
+                    or any(w <= 0 for w in self.bucket_weights):
+                raise ValueError(
+                    f"bucket_weights needs {self.buckets} positive entries, "
+                    f"got {self.bucket_weights}")
 
     def bucket_plan(self, k: Optional[int] = None, *,
                     weights: Optional[List[float]] = None
@@ -212,12 +254,15 @@ class ClusterTimeModel:
         *exactly* the step totals (see ``_exact_split`` — bucketing
         changes *when* bytes move, never how many). ``weights`` skews
         the split toward heavier layer groups (e.g. an
-        embedding-dominated first group); default uniform."""
+        embedding-dominated first group); defaults to the model's
+        ``bucket_weights`` when they match ``k``, else uniform."""
         k = self.buckets if k is None else k
         if k < 1:
             raise ValueError(f"bucket_plan needs k >= 1, got {k}")
         if weights is None:
-            weights = [1.0] * k
+            weights = list(self.bucket_weights) \
+                if self.bucket_weights is not None \
+                and len(self.bucket_weights) == k else [1.0] * k
         if len(weights) != k or any(w <= 0 for w in weights):
             raise ValueError(f"need {k} positive weights, got {weights}")
         total_w = math.fsum(weights)
@@ -229,11 +274,15 @@ class ClusterTimeModel:
     def from_config(cls, cfg, shape, *, nodes: int, devices_per_node: int = 8,
                     ckpt_path: str = SOC, grad_dtype_bytes: int = 2,
                     state_bytes_per_param: int = 10,
-                    buckets: int = 1) -> "ClusterTimeModel":
+                    buckets: int = 1,
+                    weighted_buckets: bool = False) -> "ClusterTimeModel":
         """Roofline estimate from a model config + batch shape: compute
         is 6*N*D over the cluster's peak FLOP/s; gradient staging is the
         bf16 gradient buffer; the checkpoint shard is params + AdamW
-        moments split over the nodes."""
+        moments split over the nodes. ``weighted_buckets`` sizes each
+        gradient bucket from the model's *real* per-layer-group
+        parameter counts (layer_group_weights) instead of splitting
+        uniformly."""
         from repro.core.roofline import model_flops_for
         tokens = shape.global_batch * shape.seq_len
         flops = model_flops_for(cfg.active_param_count(), tokens, "train")
@@ -246,6 +295,8 @@ class ClusterTimeModel:
             ckpt_path=ckpt_path,
             tokens_per_step=tokens,
             buckets=buckets,
+            bucket_weights=tuple(layer_group_weights(cfg, buckets))
+            if weighted_buckets and buckets > 1 else None,
         )
 
 
@@ -293,7 +344,8 @@ class TrainCluster:
                  microbatches_per_node: int = 8,
                  fail_at: Optional[Tuple[str, int]] = None,
                  tenant: Optional[str] = None,
-                 topology: Any = None):
+                 topology: Any = None,
+                 tracer=None):
         if nodes < 1:
             raise ValueError("cluster needs at least one node")
         self.tm = time_model
@@ -310,8 +362,17 @@ class TrainCluster:
             else:
                 fabric = train_fabric(nodes)
         self.fabric = fabric
-        self.runtime = runtime if runtime is not None \
-            else FabricRuntime(self.fabric)
+        # a cluster that owns its runtime traces by default (bucket
+        # phase spans back the bucket_timeline accessor); a cluster on
+        # a *shared* runtime inherits that runtime's tracer instead
+        if runtime is not None:
+            if tracer is not None:
+                raise ValueError("pass the tracer to the shared runtime, "
+                                 "not to the cluster")
+            self.runtime = runtime
+        else:
+            self.runtime = FabricRuntime(
+                self.fabric, tracer=tracer if tracer is not None else Tracer())
         self.step_fn = step_fn
         self.params, self.opt_state = params, opt_state
         self.batch_at = batch_at
@@ -384,11 +445,11 @@ class TrainCluster:
         self.mesh_shape: Tuple[int, ...] = ()
         self._barrier: Optional[Barrier] = None
         self._bucket_barriers: List[Barrier] = []
-        #: per-(step, bucket) overlap record: t_issue (first node issued
-        #: the bucket's allreduce) -> t_done (the bucket's barrier
-        #: released) — the measurable overlap timeline
-        self.bucket_timeline: List[dict] = []
-        self._bucket_open: Dict[Tuple[int, int], float] = {}
+        # open bucket phase spans keyed (step, bucket): opened by the
+        # first node to issue the bucket's allreduce, closed at the
+        # bucket barrier's release — the overlap timeline now lives in
+        # the tracer (see the bucket_timeline accessor)
+        self._bucket_spans: Dict[Tuple[int, int], Optional[Span]] = {}
         self._step = 0
         self._end = 0
         self._step_start = 0.0
@@ -637,10 +698,21 @@ class TrainCluster:
         yield self._bucket_barriers[k].arrive()
 
     def _on_bucket_done(self, k: int, _generation: int) -> None:
-        t_issue = self._bucket_open.pop((self._step, k), None)
-        self.bucket_timeline.append({
-            "step": self._step, "bucket": k,
-            "t_issue": t_issue, "t_done": self.runtime.clock.now})
+        span = self._bucket_spans.pop((self._step, k), None)
+        self.runtime.tracer.end_phase(span)
+
+    @property
+    def bucket_timeline(self) -> List[dict]:
+        """Per-(step, bucket) overlap records derived from the tracer's
+        bucket phase spans: ``t_issue`` (first node issued the bucket's
+        allreduce) -> ``t_done`` (the bucket's barrier released), in
+        close order. Empty for single-shot (k=1) runs — and for a
+        cluster sharing an untraced runtime, where no spans exist."""
+        return [{"step": s.meta["step"], "bucket": s.meta["bucket"],
+                 "t_issue": s.t_start, "t_done": s.t_end}
+                for s in self.runtime.tracer.spans
+                if s.kind == PHASE and s.name == "bucket"
+                and not s.meta.get("aborted")]
 
     def _node_proc(self, node: ClusterNode):
         rt, tm = self.runtime, self.tm
@@ -682,7 +754,11 @@ class TrainCluster:
                 for k, sl in enumerate(plan):
                     yield sl.compute_s * node.compute_scale \
                         * node.share_scale
-                    self._bucket_open.setdefault((step, k), rt.clock.now)
+                    if (step, k) not in self._bucket_spans:
+                        self._bucket_spans[(step, k)] = \
+                            rt.tracer.begin_phase("bucket",
+                                                  tenant=self.tenant,
+                                                  step=step, bucket=k)
                     node.subprocs.append(rt.process(
                         self._bucket_proc(node, k, sl.grad_bytes, own_done),
                         name=f"bucket:{node.name}:{k}"))
@@ -825,7 +901,12 @@ class TrainCluster:
                             "axes": axes, "resume_step": resume})
         self._step = resume
         self._step_start = now
-        self._bucket_open.clear()    # the aborted step's issue stamps
+        # the aborted step's open bucket spans: close them marked
+        # aborted so the timeline accessor skips them (the re-run step
+        # opens fresh spans)
+        for span in self._bucket_spans.values():
+            self.runtime.tracer.end_phase(span, aborted=True)
+        self._bucket_spans.clear()
         self._spawn(survivors)
 
     # -- lifecycle -------------------------------------------------------

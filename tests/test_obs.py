@@ -1,0 +1,366 @@
+"""Fabric observability (PR 10): per-flow tracing, metrics, export.
+
+The load-bearing assertions:
+  (a) transfer spans close with exact step-function rate timelines —
+      the integral of a span's timeline is *exactly* the units moved;
+  (b) every rate annotation agrees with the BudgetLedger reservation
+      for that transfer to the digit (the hook fires after ``t.rate``
+      and ``t._res`` are set from the same rebalance);
+  (c) tracing is record-only: simulated results are bit-identical with
+      the tracer on vs off;
+  (d) the Chrome-trace export is schema-valid and carries one process
+      per tenant;
+  (e) the tracer's busy-fraction attribution agrees with the sampled
+      ``InterferenceReport`` occupancy on the real colocation scenario;
+  (f) weighted bucket plans from the real parameter tree sum exactly.
+"""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fabric import Fabric, IN, OUT, Path
+from repro.core.runtime import FabricRuntime
+from repro.obs.export import (chrome_trace, dump, summary,
+                              validate_chrome_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               OccupancyTimeSeries)
+from repro.obs.trace import (BARRIER, COMPUTE, NULL_TRACER, PHASE, PROCESS,
+                             TRANSFER, NullTracer, Tracer)
+
+
+# ----------------------------------------------------------------------
+# shared scenario: staggered transfers that rebalance mid-flight
+# ----------------------------------------------------------------------
+
+CAP, DISC = 100.0, 0.125
+
+
+def _staggered(tracer=None):
+    """t0: A starts solo; t=0.5: B joins (both drop to the discounted
+    share); A finishes first and B speeds back up — two rebalances."""
+    fabric = Fabric.of(Path("link", CAP), concurrency_discount=DISC)
+    rt = FabricRuntime(fabric, tracer=tracer)
+    a = rt.transfer("link", 60.0, flow="a", tenant="t0")
+    b = []
+    rt.clock.schedule(0.5, lambda: b.append(
+        rt.transfer("link", 40.0, flow="b", tenant="t1")))
+    rt.clock.run()
+    return rt, a, b[0]
+
+
+def test_transfer_spans_close_with_exact_rate_timelines():
+    tracer = Tracer()
+    rt, a, b = _staggered(tracer)
+    spans = [s for s in tracer.spans if s.kind == TRANSFER]
+    assert len(spans) == 2
+    for s in spans:
+        assert s.closed and s.t_end > s.t_start
+        assert s.path == "link" and s.direction == OUT
+        # a closed step function: starts at the initial rate, ends at 0
+        assert s.rate_timeline[0][0] == s.t_start
+        assert s.rate_timeline[0][1] > 0.0
+        assert s.rate_timeline[-1] == (s.t_end, 0.0)
+    by_flow = {s.flow: s for s in spans}
+    # the integral of the rate timeline is exactly the units moved
+    assert by_flow["a"].busy_units() == pytest.approx(60.0, rel=1e-12)
+    assert by_flow["b"].busy_units() == pytest.approx(40.0, rel=1e-12)
+    assert by_flow["a"].tenant == "t0" and by_flow["b"].tenant == "t1"
+    # B saw the join (discounted share) and A's departure (solo rate)
+    rates = [r for _, r in by_flow["b"].rate_timeline]
+    assert CAP * (1 - DISC) / 2 in rates           # 43.75, shared
+    assert CAP in rates                            # solo again
+
+
+def test_rate_annotations_match_ledger_reservations_to_the_digit():
+    tracer = Tracer()
+    fabric = Fabric.of(Path("link", CAP), concurrency_discount=DISC)
+    rt = FabricRuntime(fabric, tracer=tracer)
+    ts = [rt.transfer("link", 100.0, flow=f"f{i}", tenant=f"t{i % 2}")
+          for i in range(3)]
+    rt.clock.schedule(0.7, lambda: rt.transfer("link", 50.0, flow="late"))
+    probes = []
+
+    def probe():
+        now = rt.clock.now
+        open_spans = [s for s in tracer.open_spans() if s.kind == TRANSFER]
+        probes.append((now,
+                       {s.flow: s.rate_at(now) for s in open_spans},
+                       rt.ledger.reserved("link", OUT)))
+        # per-transfer: the span's current rate IS the reservation
+        by_flow = {t.flow: t for t in ts}
+        for s in open_spans:
+            t = by_flow.get(s.flow)
+            if t is not None:
+                assert s.rate_at(now) == t._res          # exact, not approx
+
+    for at in (0.3, 0.9, 1.5):
+        rt.clock.schedule(at, probe)
+    rt.clock.run()
+    assert len(probes) == 3
+    for now, rates, reserved in probes:
+        assert rates, f"no open spans at t={now}"
+        # aggregate: annotated rates sum to the ledger's reservation
+        assert math.fsum(rates.values()) == pytest.approx(reserved,
+                                                          rel=1e-12)
+
+
+def test_simulated_results_bit_identical_tracer_on_vs_off():
+    rt_off, a_off, b_off = _staggered()             # NULL_TRACER default
+    rt_on, a_on, b_on = _staggered(Tracer())
+    assert rt_off.tracer is NULL_TRACER and not rt_off._trace
+    assert a_on.finished_at == a_off.finished_at    # bit-identical
+    assert b_on.finished_at == b_off.finished_at
+    assert rt_on.clock.now == rt_off.clock.now
+    assert rt_on.clock.processed == rt_off.clock.processed
+
+
+def test_null_tracer_records_nothing_and_reads_empty():
+    rt, _, _ = _staggered(NullTracer())
+    assert rt.tracer.spans == () and not rt._trace
+    assert rt.tracer.open_spans() == []
+    assert rt.tracer.busy_units() == {}
+    assert rt.tracer.busy_fraction() == {}
+    with rt.tracer.phase("nope") as span:
+        assert span is None
+
+
+def test_phase_nesting_parent_links_and_closure():
+    tracer = Tracer()
+    fabric = Fabric.of(Path("p", 10.0))
+    FabricRuntime(fabric, tracer=tracer)            # attaches the clock
+    with tracer.phase("outer", tenant="t0") as outer:
+        with tracer.phase("inner") as inner:
+            assert inner.parent is outer
+            assert not inner.closed
+        assert inner.closed and not outer.closed
+    assert outer.closed
+    # explicit begin/end pairs close too, and merge end-time meta
+    span = tracer.begin_phase("manual", step=3)
+    assert span in tracer.open_spans()
+    tracer.end_phase(span, aborted=True)
+    assert span.closed and span.meta["step"] == 3 and span.meta["aborted"]
+    tracer.end_phase(None)                          # no-op, never raises
+
+
+def test_barrier_and_process_spans():
+    tracer = Tracer()
+    fabric = Fabric.of(Path("p", 10.0))
+    rt = FabricRuntime(fabric, tracer=tracer)
+    bar = rt.barrier(2, name="sync")
+
+    def worker(delay):
+        yield delay
+        yield bar.arrive()
+
+    rt.process(worker(0.25), name="w0")
+    rt.process(worker(0.5), name="w1")
+    rt.clock.run()
+    bspans = [s for s in tracer.spans if s.kind == BARRIER]
+    assert len(bspans) == 1 and bspans[0].t_start == 0.5
+    assert bspans[0].meta["parties"] == 2
+    pspans = [s for s in tracer.spans if s.kind == PROCESS]
+    assert {s.name for s in pspans} == {"w0", "w1"}
+    assert all(s.closed and s.t_end == 0.5 for s in pspans)
+
+
+def test_chrome_trace_schema_and_per_tenant_processes(tmp_path):
+    tracer = Tracer()
+    _staggered(tracer)
+    doc = chrome_trace(tracer)
+    assert validate_chrome_trace(doc) == []
+    names = {(e["pid"], e["args"]["name"]) for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {n for _, n in names} >= {"tenant:t0", "tenant:t1"}
+    # rate-change instants ride the X events
+    assert any(e["ph"] == "i" for e in doc["traceEvents"])
+    out = tmp_path / "trace.json"
+    dump(tracer, str(out))
+    assert validate_chrome_trace(json.loads(out.read_text())) == []
+    text = summary(tracer)
+    assert "t0" in text and "link:out" in text
+
+
+def test_busy_fraction_agrees_with_occupancy_sampler():
+    """The exact span integrals and the every-10ms ledger sampler are
+    two estimators of the same attribution — they must agree."""
+    tracer = Tracer()
+    fabric = Fabric.of(Path("link", CAP), concurrency_discount=DISC)
+    rt = FabricRuntime(fabric, tracer=tracer)
+    sampler = OccupancyTimeSeries(rt, every=0.01)
+    rng = np.random.default_rng(3)
+    for i in range(12):
+        rt.clock.schedule(0.2 * i, lambda i=i: rt.transfer(
+            "link", float(rng.uniform(5, 40)), flow=f"f{i}",
+            tenant=f"t{i % 3}"))
+    rt.clock.run(until=5.0)          # the sampler is periodic: bound the run
+    sampled = sampler.averages(OUT)["link"]
+    exact = {t: f for (t, p, d), f in tracer.busy_fraction().items()
+             if p == "link" and d == OUT}
+    assert set(sampled) == set(exact)
+    for tenant, frac in exact.items():
+        assert sampled[tenant] == pytest.approx(frac, abs=0.05), tenant
+
+
+# ----------------------------------------------------------------------
+# (e) the acceptance scenario: colocation trace vs InterferenceReport
+# ----------------------------------------------------------------------
+
+def test_colocation_trace_agrees_with_interference_report(tmp_path):
+    import argparse
+
+    from repro.launch.colocate import build_pieces
+    from repro.tenancy import AdmissionConfig, Colocation, QoSPolicy
+    args = argparse.Namespace(
+        arch="internlm2-1.8b", reduced=True, nodes=2, requests=6,
+        train_steps=3, slots=2, prompt_len=8, max_new=4, spacing=0.3,
+        host_bw=16.0, soc_frac=0.7, discount=0.1, prefill_units=0.25,
+        decode_units=0.25, grad_units=16.0, ckpt_units=8.0, ckpt_every=2,
+        ckpt_staging="soc", compute_s=0.3, tokens_per_step=1024, seed=7)
+    fabric, make_engine, make_cluster, requests = build_pieces(args)
+    tracer = Tracer()
+    rep = Colocation(fabric=fabric(), make_engine=make_engine,
+                     make_cluster=make_cluster,
+                     qos=QoSPolicy.serve_train(16.0, 1.0),
+                     tracer=tracer).run(requests(), args.train_steps)
+    # the trace exports clean
+    out = tmp_path / "coloc.json"
+    dump(tracer, str(out))
+    doc = json.loads(out.read_text())
+    assert validate_chrome_trace(doc) == []
+    # per-tenant busy time agrees with the report's sampled occupancy
+    frac = tracer.busy_fraction()
+    checked = 0
+    for path, per_tenant in rep.occupancy.items():
+        for tenant, sampled in per_tenant.items():
+            exact = frac.get((tenant, path, OUT), 0.0)
+            assert sampled == pytest.approx(exact, abs=0.05), (path, tenant)
+            checked += 1
+    assert checked >= 4
+    # every tenant in the report shows up as a trace process
+    pids = {e["args"]["name"] for e in doc["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"tenant:serve", "tenant:train"} <= pids
+
+
+# ----------------------------------------------------------------------
+# (f) weighted bucket plans from the real parameter tree
+# ----------------------------------------------------------------------
+
+def test_layer_group_weights_track_the_param_tree():
+    from repro.configs import get_config
+    from repro.configs.base import _param_tree_sizes
+    from repro.train.cluster import layer_group_weights
+    cfg = get_config("internlm2-1.8b").reduced()
+    total = float(sum(_param_tree_sizes(cfg).values()))
+    for k in (1, 2, cfg.num_layers):
+        w = layer_group_weights(cfg, k)
+        assert len(w) == k and all(x > 0 for x in w)
+        assert math.fsum(w) == pytest.approx(total, rel=1e-12)
+    # the embedding rides group 0 and the head/final norm the last
+    # group, on top of each group's own layer parameters
+    sizes = _param_tree_sizes(cfg)
+    w = layer_group_weights(cfg, cfg.num_layers)
+
+    def layer_sum(i):
+        return sum(v for n, v in sizes.items()
+                   if n.startswith(f"layer{i}."))
+
+    assert w[0] == layer_sum(0) + sizes["embed.table"]
+    assert w[-1] == (layer_sum(cfg.num_layers - 1) + sizes["lm_head"]
+                     + sizes["final_norm"])
+    with pytest.raises(ValueError):
+        layer_group_weights(cfg, cfg.num_layers + 1)
+
+
+def test_weighted_bucket_plan_sums_exactly():
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.train.cluster import ClusterTimeModel
+    cfg = get_config("internlm2-1.8b")     # full depth: sizes only, no jax
+    shape = ShapeConfig("t", 128, 8, "train")
+    for k in (2, 3, 4):
+        tm = ClusterTimeModel.from_config(cfg, shape, nodes=2, buckets=k,
+                                          weighted_buckets=True)
+        assert tm.bucket_weights is not None and len(tm.bucket_weights) == k
+        plan = tm.bucket_plan()
+        # bit-exact conservation regardless of the weights
+        assert sum(b.grad_bytes for b in plan) == tm.grad_bytes
+        assert sum(b.compute_s for b in plan) == tm.compute_s
+        # the split actually follows the weights (not uniform)
+        heavy = max(range(k), key=lambda i: tm.bucket_weights[i])
+        assert plan[heavy].grad_bytes == max(b.grad_bytes for b in plan)
+    # replace() back to one bucket drops the weights cleanly
+    import dataclasses
+    tm1 = dataclasses.replace(tm, buckets=1, bucket_weights=None)
+    assert [b.grad_bytes for b in tm1.bucket_plan()] == [tm.grad_bytes]
+    with pytest.raises(ValueError):
+        ClusterTimeModel(compute_s=1.0, grad_bytes=4.0, buckets=2,
+                         bucket_weights=(1.0, -1.0))
+
+
+def test_cluster_rejects_tracer_plus_shared_runtime():
+    from repro.serve.engine import StagedServeEngine  # noqa: F401
+    from repro.train.cluster import ClusterTimeModel, TrainCluster
+    tm = ClusterTimeModel(compute_s=0.1, grad_bytes=4.0)
+    rt = FabricRuntime(Fabric.of(Path("host:0", 10.0), Path("soc:0", 7.0),
+                                 Path("net", 10.0)))
+    with pytest.raises(ValueError):
+        TrainCluster(1, tm, fabric=rt.fabric, runtime=rt, tracer=Tracer())
+    # a cluster that owns its runtime traces by default: the bucket
+    # timeline accessor works with zero setup
+    cluster = TrainCluster(2, ClusterTimeModel(compute_s=0.05,
+                                               grad_bytes=4.0, buckets=2))
+    cluster.run(2)
+    tl = cluster.bucket_timeline
+    assert len(tl) == 2 * 2                         # steps x buckets
+    assert all(row["t_done"] >= row["t_issue"] for row in tl)
+    assert {row["bucket"] for row in tl} == {0, 1}
+
+
+# ----------------------------------------------------------------------
+# metrics primitives + the re-platformed OffloadStats
+# ----------------------------------------------------------------------
+
+def test_metrics_primitives():
+    c = Counter("n")
+    assert c.value == 0 and isinstance(c.value, int)
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    g = Gauge("depth")
+    g.set(4.5)
+    assert g.value == 4.5
+    h = Histogram("lat")
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        h.observe(v)
+    assert h.count == 5 and h.mean == 3.0
+    assert h.percentile(0) == 1.0
+    assert h.percentile(50) == 3.0 and h.percentile(100) == 5.0
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")     # get-or-create
+    reg.counter("x").inc(5)
+    reg.gauge("y").set(1.0)
+    snap = reg.snapshot()
+    assert snap["counters"]["x"] == 5 and snap["gauges"]["y"] == 1.0
+
+
+def test_offload_stats_ride_the_metrics_registry():
+    from repro.offload.program import OffloadStats
+    st = OffloadStats()
+    st.record_program(100.0)
+    st.record_compression(1000.0, 300.0)
+    st.record_filter(100, 20)
+    c = st.counters
+    assert c["programs_run"] == 1
+    assert c["compression_bytes_in"] == 1000.0
+    assert c["compression_bytes_out"] == 300.0
+    assert c["packets_offloaded"] == 80 and c["packets_total"] == 100
+    perf = st.get_performance_stats()
+    assert perf["compression_ratio"] == pytest.approx(0.3)
+    assert perf["offload_hit_rate"] == pytest.approx(0.8)
+    assert c["cpu_cycles_saved"] > 0
+    # a shared registry sees the same numbers
+    assert st.metrics.counter("programs_run").value == 1
